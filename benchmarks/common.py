@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark harness. Each ``table*.py`` module is a
+standalone script reproducing one paper table/figure; ``run.py`` executes
+them as subprocesses (so the dry-run benchmarks can claim their own fake
+device count) and aggregates the CSV output."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+def emit(name: str, rows: List[Dict], keys: List[str]) -> None:
+    """Print a CSV block and persist JSON next to the dry-run artifacts."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# {name}")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    sys.stdout.flush()
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters

@@ -1,0 +1,57 @@
+"""Shared pre-trained dense checkpoint for the training benchmarks
+(table3/table4/fig3 all upcycle the SAME dense model, like the paper's
+experiments all start from the same Llama 3-8B checkpoint). Sized for the
+single-CPU-core container."""
+import os
+
+import jax
+
+from benchmarks.common import OUT_DIR
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.config import ModelConfig, TrainConfig
+from repro.data.pipeline import make_train_iter
+from repro.train.trainer import Trainer
+
+BASE_STEPS = 350
+CT_STEPS = 120
+DATA_SEED = 11  # one synthetic "language" for every benchmark phase
+CKPT = os.path.join(OUT_DIR, "dense_base_ckpt")
+
+
+def base_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="bench-dense", family="dense", num_layers=2, d_model=192,
+        num_heads=6, num_kv_heads=2, d_ff=768, vocab_size=2048,
+        vocab_divisor=256, rope_theta=10000.0, remat="none",
+    )
+
+
+def tcfg(steps: int) -> TrainConfig:
+    return TrainConfig(global_batch=8, seq_len=128, lr=1.5e-3, lr_min=1.5e-4,
+                       warmup_steps=20, total_steps=steps, log_every=20,
+                       seed=DATA_SEED)
+
+
+def data(sample_seed: int):
+    """Fresh sampling stream of the SAME language."""
+    c = base_cfg()
+    t = tcfg(1)
+    return make_train_iter(c.vocab_size, t.seq_len, t.global_batch,
+                           seed=DATA_SEED, sample_seed=sample_seed)
+
+
+def get_pretrained():
+    """Returns (cfg, params) — trains once, then loads from cache."""
+    cfg = base_cfg()
+    if os.path.exists(os.path.join(CKPT, "manifest.json")):
+        return cfg, load_checkpoint(CKPT)
+    tr = Trainer(cfg, tcfg(BASE_STEPS), data_iter=data(100))
+    tr.run(BASE_STEPS, log=lambda *_: None)
+    save_checkpoint(CKPT, tr.params, step=BASE_STEPS)
+    return cfg, tr.params
+
+
+def eval_ce(cfg, params, batches: int = 6, seed: int = 999) -> float:
+    tr = Trainer.__new__(Trainer)  # eval-only shell
+    tr.cfg, tr.tcfg, tr.plan, tr.params = cfg, tcfg(1), None, params
+    return tr.eval_loss(batches=batches, seed=seed)

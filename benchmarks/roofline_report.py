@@ -1,0 +1,18 @@
+"""§Roofline deliverable: render the per-(arch x shape) roofline table from
+the dry-run artifacts (single-pod mesh). Requires a prior
+`python -m repro.launch.dryrun --all [--both-meshes]` run."""
+import os
+
+from repro.roofline.report import render
+
+
+def main():
+    d = "experiments/dryrun"
+    if not os.path.isdir(d) or not os.listdir(d):
+        print("no dry-run artifacts found; run repro.launch.dryrun --all first")
+        return
+    print(render(d))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Each module runs in its own subprocess because the Table-2 roofline
+benchmark needs 512 fake devices while the training benchmarks need the
+single real CPU device (jax pins the device count at first init).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table4_cf  # one
+"""
+import os
+import subprocess
+import sys
+import time
+
+MODULES = [
+    "table1_flops",     # Table 1: params + FLOPs, dense vs E8T2
+    "table2_parallel",  # Table 2: parallel-config roofline MFU sweep
+    "table3_quality",   # Table 3/§5: upcycled vs dense-CT quality
+    "table4_cf",        # Table 4/Fig 2: capacity-factor ablation
+    "fig3_router",      # Fig 3: mixtral vs st router
+    "kernel_bench",     # Pallas kernels vs XLA refs
+    "roofline_report",  # §Roofline table from the dry-run artifacts
+]
+
+
+def main() -> None:
+    picked = sys.argv[1:] or MODULES
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + ":" + root
+    failures = []
+    for mod in picked:
+        t0 = time.time()
+        print(f"==== benchmarks.{mod} ====", flush=True)
+        r = subprocess.run(
+            [sys.executable, "-m", f"benchmarks.{mod}"], env=env, cwd=root,
+            capture_output=True, text=True,
+        )
+        print(r.stdout)
+        if r.returncode != 0:
+            failures.append(mod)
+            print(f"FAILED ({r.returncode}):\n{r.stderr[-3000:]}", flush=True)
+        print(f"==== {mod} done in {time.time()-t0:.0f}s ====\n", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

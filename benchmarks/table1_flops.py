@@ -1,0 +1,90 @@
+"""Paper Table 1: total/active params and forward FLOPs, Llama3-8B vs E8T2.
+
+Analytic counts from the config system plus *compiled* FLOPs from
+``cost_analysis()`` on a reduced-depth forward (depth scales linearly, so we
+extrapolate layer-proportionally — the full 32L model does not fit a single
+CPU host). Validates the paper's headline ratios: ~1.6x FLOPs for ~4-6x
+params (our strict counting gives 5.9x/1.70x vs the paper's 4.3x/1.6x; the
+paper's totals are not reproducible from its stated dims — see
+EXPERIMENTS.md note)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.config import get_config
+from repro.models.model import loss_fn, model_decl
+from repro.sharding.rules import abstract_from_decls
+
+
+def compiled_forward_flops(cfg, B=1, S=512, layers=2):
+    cfg = cfg.replace(num_layers=layers)
+    decls = model_decl(cfg)
+    params = abstract_from_decls(decls)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    from repro.models.model import forward
+    from repro.roofline.hlo_analysis import analyze
+
+    lowered = jax.jit(lambda p, b: forward(cfg, None, p, b)).lower(params, batch)
+    # trip-count-aware FLOPs (builtin cost_analysis counts scan bodies once)
+    return analyze(lowered.compile().as_text()).flops
+
+
+def main():
+    import dataclasses
+
+    rows = []
+    dense = get_config("llama3-8b")
+    moe4 = get_config("llama3-e8t2")
+    # Paper Table 1 counts ACTIVE FLOPs: with capacity-factor dispatch the
+    # compiled program computes E*C = k*CF*T expert slots, so CF=1 is the
+    # configuration whose compiled FLOPs equal the paper's active count
+    # (and CF=4, the training config, pays 4x that in padded slots — the
+    # MFU trade-off of Table 2).
+    moe1 = moe4.replace(moe=dataclasses.replace(moe4.moe, capacity_factor=1.0))
+    moe1 = moe1.replace(name="llama3-e8t2-cf1")
+    S = 8192
+    per_layer = {}
+    for cfg in (dense, moe1, moe4.replace(name="llama3-e8t2-cf4")):
+        t, a = cfg.param_counts()
+        f2 = compiled_forward_flops(cfg, layers=2)
+        f4 = compiled_forward_flops(cfg, layers=4)
+        # isolate per-layer cost: at B=1,S=512 the V=128k logits matmul
+        # dominates a 2-layer program and is identical across models
+        layer_flops = (f4 - f2) / 2
+        full = f2 + layer_flops * (cfg.num_layers - 2)
+        per_layer[cfg.name] = layer_flops
+        rows.append(
+            {
+                "model": cfg.name,
+                "total_params_B": round(t / 1e9, 2),
+                "active_params_B": round(a / 1e9, 2),
+                "analytic_fwd_flops_bs1_8k": f"{cfg.flops_per_token(S) * S:.3e}",
+                "compiled_fwd_flops_extrap_512tok": f"{full:.3e}",
+            }
+        )
+    # per-LAYER compiled ratio (the logits head, identical in both models,
+    # would otherwise dilute a short-sequence measurement)
+    ratio_flops = per_layer["llama3-e8t2-cf1"] / per_layer["llama3-8b"]
+    ratio_params = moe4.param_counts()[0] / dense.param_counts()[0]
+    rows.append(
+        {
+            "model": "ratio (E8T2 CF1 / dense)",
+            "total_params_B": round(ratio_params, 2),
+            "active_params_B": round(moe4.param_counts()[1] / dense.param_counts()[1], 2),
+            "analytic_fwd_flops_bs1_8k": round(
+                moe4.flops_per_token(S) / dense.flops_per_token(S), 3
+            ),
+            "compiled_fwd_flops_extrap_512tok": round(ratio_flops, 3),
+        }
+    )
+    emit("table1_flops", rows, list(rows[0]))
+    # paper Table 1: ~1.6x active FLOPs; CF-padded compute is larger
+    assert 1.3 < ratio_flops < 2.2, ratio_flops
+    assert per_layer["llama3-e8t2-cf4"] > per_layer["llama3-e8t2-cf1"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table 4 / Figure 2: capacity-factor ablation.
+
+Upcycle the same trained dense checkpoint with CF in {1, 2, 4, dropless},
+train each for the same budget, report: held-out CE (quality), measured
+step time and capacity-buffer tokens per expert (throughput proxies for the
+paper's MFU column), and the realized token-drop fraction. Paper findings
+checked: CF1 has the smallest dispatch buffer (best MFU) but drops tokens;
+dropless has the largest buffer and no quality edge over CF2/CF4."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.pretrain_cache import CT_STEPS, base_cfg, data, get_pretrained, tcfg
+from repro.config import MoEConfig
+from repro.core.moe import _dispatch_tables, capacity
+from repro.core.upcycle import upcycle_config, upcycle_params
+from repro.train.trainer import Trainer
+
+
+def drop_fraction(moe_cfg, params, batch):
+    from repro.core.router import route
+    from repro.models.layers import embed_apply
+
+    x = embed_apply(params["embed"], batch["tokens"], jnp.float32)
+    r = params["stack"]["slot0"]["ffn"]["router"]
+    moe = moe_cfg.moe
+    gates, idx, _ = route(moe, jax.tree.map(lambda v: v[0], r), x.reshape(-1, x.shape[-1]))
+    T = gates.shape[0]
+    C = capacity(moe, T)
+    _, slot_gate = _dispatch_tables(idx, gates, moe.num_experts, C)
+    kept = float((np.asarray(slot_gate) > 0).sum())
+    return 1.0 - kept / (T * moe.top_k)
+
+
+def main():
+    cfg, params = get_pretrained()
+    rows = []
+
+    ct = Trainer(cfg, tcfg(CT_STEPS), params=params, data_iter=data(200))
+    t0 = time.perf_counter()
+    ct.run(CT_STEPS, log=lambda *_: None)
+    rows.append({"strategy": "Base Model CT", "heldout_ce": round(ct.eval_loss(6), 4),
+                 "ms_per_step": round((time.perf_counter() - t0) / CT_STEPS * 1e3, 1),
+                 "capacity_per_expert": "", "drop_frac": ""})
+
+    T = tcfg(1).global_batch * tcfg(1).seq_len
+    for cf, label in ((None, "Dropless"), (4.0, "CF 4"), (2.0, "CF 2"), (1.0, "CF 1")):
+        moe_cfg = upcycle_config(
+            cfg, MoEConfig(num_experts=4, top_k=2, capacity_factor=cf),
+            name=f"e4t2-cf{cf}",
+        )
+        mp = upcycle_params(cfg, moe_cfg, params, jax.random.PRNGKey(5))
+        tr = Trainer(moe_cfg, tcfg(CT_STEPS), params=mp, data_iter=data(200))
+        t0 = time.perf_counter()
+        tr.run(CT_STEPS, log=lambda *_: None)
+        dt = (time.perf_counter() - t0) / CT_STEPS * 1e3
+        batch = {k: jnp.asarray(v) for k, v in next(data(300)).items()}
+        df = drop_fraction(moe_cfg, tr.params, batch)
+        rows.append({"strategy": label, "heldout_ce": round(tr.eval_loss(6), 4),
+                     "ms_per_step": round(dt, 1),
+                     "capacity_per_expert": capacity(moe_cfg.moe, T),
+                     "drop_frac": round(df, 4)})
+    emit("table4_cf", rows, list(rows[0]))
+    caps = [r["capacity_per_expert"] for r in rows[1:]]
+    assert caps[0] == max(caps) and caps[-1] == min(caps)  # dropless max, CF1 min
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end training driver: pre-train a dense model, checkpoint it, then
+ONLINE-upcycle the checkpoint to an 8-Expert Top-2 MoE (the paper's E8T2
+recipe: CF=4, Mixtral router, cosine 3e-5->3e-7-style schedule scaled to
+this budget) and train it for a few hundred steps on the 7:3 blend.
+
+Default scale (~8M params) runs on a single CPU core in a few minutes; pass
+--big for a ~100M-param model if you have the patience or a real chip.
+
+Run:  PYTHONPATH=src python examples/train_upcycled.py [--big] [--steps N]
+"""
+import argparse
+
+import jax
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.config import ModelConfig, MoEConfig, TrainConfig
+from repro.core.upcycle import upcycle_config, upcycle_params
+from repro.data.pipeline import make_train_iter
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--big", action="store_true", help="~100M-param variant")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--ckpt", default="/tmp/repro_quick_dense")
+    args = ap.parse_args()
+
+    if args.big:
+        dense_cfg = ModelConfig(
+            name="upc-dense-100m", family="dense", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32000,
+            vocab_divisor=1024, rope_theta=10000.0,
+        )
+        B, S = 8, 256
+    else:
+        dense_cfg = ModelConfig(
+            name="upc-dense-8m", family="dense", num_layers=4, d_model=256,
+            num_heads=4, num_kv_heads=2, d_ff=768, vocab_size=4096,
+            vocab_divisor=512, rope_theta=10000.0, remat="none",
+        )
+        B, S = 8, 128
+    t, _ = dense_cfg.param_counts()
+    print(f"dense model: {t/1e6:.1f}M params")
+
+    tcfg = TrainConfig(global_batch=B, seq_len=S, lr=6e-4, lr_min=6e-6,
+                       warmup_steps=20, total_steps=args.steps, log_every=20, seed=0)
+    it = make_train_iter(dense_cfg.vocab_size, S, B, seed=0)
+
+    print(f"== phase 1: pre-train dense for {args.steps} steps ==")
+    dense = Trainer(dense_cfg, tcfg, data_iter=it)
+    dense.run(args.steps)
+    save_checkpoint(args.ckpt, dense.params, step=args.steps)
+    print(f"checkpoint saved to {args.ckpt}")
+
+    print("\n== phase 2: online upcycle -> E8T2 (paper §4.2 recipe) ==")
+    moe_cfg = upcycle_config(
+        dense_cfg,
+        MoEConfig(num_experts=8, top_k=2, capacity_factor=4.0, router_type="mixtral"),
+    )
+    dense_params = load_checkpoint(args.ckpt)
+    moe_params = upcycle_params(dense_cfg, moe_cfg, dense_params, jax.random.PRNGKey(7))
+    tm, am = moe_cfg.param_counts()
+    print(f"E8T2: {tm/1e6:.1f}M total / {am/1e6:.1f}M active")
+
+    print(f"\n== phase 3: train the upcycled MoE for {args.steps} steps ==")
+    moe = Trainer(moe_cfg, tcfg, params=moe_params, data_iter=it)
+    moe.run(args.steps)
+    d_eval, m_eval = dense.eval_loss(4), moe.eval_loss(4)
+    print(f"\nheld-out CE — dense: {d_eval:.4f}   upcycled E8T2: {m_eval:.4f}")
+    print("(the MoE should match or beat the dense model: same warm start, more capacity)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,370 @@
+"""Configuration system for the upcycling framework.
+
+Frozen dataclasses describing the model family, the MoE/upcycling recipe
+(the paper's contribution), the parallel layout (MoE Parallel Folding), and
+the training run. Every assigned architecture registers itself under
+``repro.configs.<id>`` and is selectable via ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts recipe (paper §2, §3).
+
+    ``capacity_factor=None`` means token-dropless training (infinite CF): the
+    per-expert capacity becomes the worst case (all tokens to one expert).
+    ``router_type``:
+      * ``mixtral`` — KeepTopK then Softmax over the k survivors (paper §5.2;
+        preserves the dense function at upcycling init).
+      * ``st``      — Softmax over all N experts then KeepTopK (keeps absolute
+        router magnitudes; does NOT preserve the dense function for 1<k<N).
+    ``dispatcher``: ``allgather`` or ``alltoall`` (Megatron-Core's two token
+    dispatchers, §3.2 practice #2).
+    """
+
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: Optional[float] = 4.0
+    router_type: str = "mixtral"  # mixtral | st
+    noisy_gating: bool = False  # Eq. (3) noisy top-k; off in paper main runs
+    aux_loss_coef: float = 1e-2  # Switch-style load balance loss
+    z_loss_coef: float = 1e-3  # router z-loss
+    dispatcher: str = "allgather"  # allgather | alltoall
+    expert_d_ff: int = 0  # per-expert FFN hidden size (0 -> use model d_ff)
+    moe_layer_freq: int = 1  # MoE every k-th layer (jamba: 2)
+    dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    router_dtype: str = "float32"
+
+    def experts_ff(self, d_ff: int) -> int:
+        return self.expert_d_ff or d_ff
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD (state-space duality) block parameters."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 8
+    chunk_size: int = 256
+    dt_min: float = 1e-3
+    dt_max: float = 1e-1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def nheads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. ``family`` controls the block stack:
+
+    * ``dense``   — decoder-only transformer (GQA or MLA attention).
+    * ``moe``     — decoder-only with MoE FFNs (``moe`` must be set).
+    * ``ssm``     — attention-free Mamba-2 stack.
+    * ``hybrid``  — interleaved Mamba/attention mixers (jamba), MoE optional.
+    * ``encdec``  — encoder-decoder (seamless); encoder consumes stub
+                    frame embeddings, decoder is a text decoder w/ cross-attn.
+    * ``vlm``     — dense decoder that consumes a stub patch-embedding prefix.
+    """
+
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encdec | vlm
+    source: str = ""  # citation for the config numbers
+
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    rope_theta: float = 500000.0
+    qkv_bias: bool = False  # qwen2.5
+    tie_embeddings: bool = False
+
+    # Sub-quadratic attention variant for long-context decode (long_500k):
+    # if set, attention is sliding-window with a ring-buffer KV cache.
+    sliding_window: Optional[int] = None
+
+    use_mla: bool = False
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # hybrid (jamba): mixer pattern per period, 'M'=mamba 'A'=attention.
+    hybrid_pattern: str = ""
+    # encdec
+    num_encoder_layers: int = 0
+    # vlm/audio stub frontend: number of prefix embedding positions the
+    # frontend contributes (precomputed patch/frame embeddings).
+    num_prefix_embeds: int = 0
+
+    # numerics
+    dtype: str = "bfloat16"
+    # Megatron-style vocab padding so the vocab dim always shards.
+    vocab_divisor: int = 2048
+
+    # remat policy for the layer scan: 'none' | 'full' | 'dots'
+    remat: str = "full"
+    # FSDP/ZeRO-3: shard weights' largest free dim over 'data' as well
+    # (jamba-398b / arctic-480b: TP/EP-sharded weights alone exceed HBM).
+    fsdp: bool = False
+    # gradient-accumulation microbatches for the train_4k shape (§Perf M4):
+    # the Megatron microbatch knob — bounds per-microbatch activation memory
+    # so the step fits HBM; grads accumulate in fp32 across microbatches.
+    train_microbatches: int = 1
+
+    # ----- derived -----
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        d = self.vocab_divisor
+        return int(math.ceil(self.vocab_size / d) * d)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if long_500k decode is in-scope (sub-quadratic rule)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.family == "encdec":
+            return False  # full-attn enc-dec; skip documented in DESIGN.md
+        return self.sliding_window is not None or self.use_mla
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ----- parameter counting (Table 1 analog) -----
+    def param_counts(self) -> Tuple[int, int]:
+        """Returns (total_params, active_params) excluding vocab padding."""
+        D, V, L = self.d_model, self.vocab_size, self.num_layers
+        hd = self.head_dim_
+        emb = V * D * (1 if self.tie_embeddings else 2)
+
+        def attn_params() -> int:
+            if self.use_mla and self.mla is not None:
+                m = self.mla
+                qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                p = D * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk
+                p += D * (m.kv_lora_rank + m.qk_rope_head_dim)
+                p += m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                p += self.num_heads * m.v_head_dim * D
+                return p
+            p = D * self.num_heads * hd + 2 * D * self.num_kv_heads * hd
+            p += self.num_heads * hd * D
+            if self.qkv_bias:
+                p += (self.num_heads + 2 * self.num_kv_heads) * hd
+            return p
+
+        def ffn_params(dff: int) -> int:
+            return 3 * D * dff  # SwiGLU: gate, up, down
+
+        def ssm_params() -> int:
+            s = self.ssm or SSMConfig()
+            di, nh, ng, ds = s.d_inner(D), s.nheads(D), s.ngroups, s.d_state
+            p = D * (2 * di + 2 * ng * ds + nh)  # in_proj (z,x,B,C,dt)
+            p += (di + 2 * ng * ds) * s.d_conv  # depthwise conv
+            p += 2 * nh  # A_log, D
+            p += di * D  # out_proj
+            return p
+
+        total = active = emb + D  # final norm
+        per_layer_norms = 2 * D
+
+        def moe_ffn(total_acc: int, active_acc: int) -> Tuple[int, int]:
+            m = self.moe
+            assert m is not None
+            dff = m.experts_ff(self.d_ff)
+            router = D * m.num_experts
+            t = m.num_experts * ffn_params(dff) + router
+            a = m.top_k * ffn_params(dff) + router
+            if m.dense_residual:
+                t += ffn_params(self.d_ff)
+                a += ffn_params(self.d_ff)
+            return total_acc + t, active_acc + a
+
+        for i in range(L):
+            total += per_layer_norms
+            active += per_layer_norms
+            if self.family == "ssm":
+                total += ssm_params()
+                active += ssm_params()
+                continue
+            if self.family == "hybrid" and self.hybrid_pattern:
+                kind = self.hybrid_pattern[i % len(self.hybrid_pattern)]
+                mix = ssm_params() if kind == "M" else attn_params()
+            else:
+                mix = attn_params()
+            total += mix
+            active += mix
+            if self.moe is not None and (i % self.moe.moe_layer_freq) == (self.moe.moe_layer_freq - 1):
+                total, active = moe_ffn(total, active)
+            elif self.d_ff:
+                total += ffn_params(self.d_ff)
+                active += ffn_params(self.d_ff)
+        if self.family == "encdec":
+            # encoder layers: self-attn + ffn; decoder already counted above,
+            # add cross-attention per decoder layer.
+            for _ in range(self.num_encoder_layers):
+                total += attn_params() + ffn_params(self.d_ff) + per_layer_norms
+                active += attn_params() + ffn_params(self.d_ff) + per_layer_norms
+            cross = L * (attn_params() + D)
+            total += cross
+            active += cross
+        return total, active
+
+    def flops_per_token(self, seq_len: int = 1) -> int:
+        """Approximate forward FLOPs per token (2*active matmul params +
+        attention score FLOPs). Used for Table 1 and MFU accounting."""
+        _, active = self.param_counts()
+        flops = 2 * active
+        if self.family != "ssm":
+            # causal attention: 2 * 2 * H * hd * S_avg per token
+            n_attn = self.num_layers
+            if self.family == "hybrid" and self.hybrid_pattern:
+                per = self.hybrid_pattern
+                n_attn = sum(1 for i in range(self.num_layers) if per[i % len(per)] == "A")
+            flops += 4 * n_attn * self.num_heads * self.head_dim_ * (seq_len // 2)
+        return flops
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Training run hyperparameters (paper §4.2 defaults, scaled)."""
+
+    global_batch: int = 32
+    seq_len: int = 512
+    lr: float = 3e-5
+    lr_min: float = 3e-7
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 1234
+    zero1: bool = True  # shard optimizer state over the data axis
+    # data blend (paper §4.1): two sources mixed 7:3
+    blend_ratio: float = 0.7
+    log_every: int = 10
+    ckpt_every: int = 0  # 0 = off
+    ckpt_dir: str = "/tmp/repro_ckpt"
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "mamba2-2.7b",
+    "minicpm3-4b",
+    "seamless-m4t-medium",
+    "llama3.2-3b",
+    "stablelm-1.6b",
+    "jamba-1.5-large-398b",
+    "qwen3-moe-30b-a3b",
+    "llava-next-34b",
+    "qwen2.5-14b",
+    "arctic-480b",
+    # paper's own models
+    "llama3-8b",
+    "llama3-e8t2",
+)
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced variant of the same family for CPU smoke tests:
+    <=2 periods, d_model<=512, <=4 experts, tiny vocab."""
+    kw: dict = dict(
+        d_model=256,
+        vocab_size=1024,
+        vocab_divisor=128,
+        num_prefix_embeds=16 if cfg.num_prefix_embeds else 0,
+        fsdp=False,
+    )
+    if cfg.family == "ssm":
+        kw.update(num_layers=2, ssm=dataclasses.replace(cfg.ssm, d_state=32, headdim=32, ngroups=4, chunk_size=16))
+    elif cfg.family == "hybrid":
+        # one full period of the mixer pattern (covers every slot kind)
+        kw.update(
+            num_layers=len(cfg.hybrid_pattern or "M"),
+            ssm=dataclasses.replace(cfg.ssm, d_state=32, headdim=32, ngroups=4, chunk_size=16),
+        )
+    else:
+        kw.update(num_layers=2)
+    if cfg.family == "encdec":
+        kw.update(num_encoder_layers=2)
+    if cfg.num_heads:
+        kw.update(num_heads=4, num_kv_heads=min(cfg.num_kv_heads, 2) or 2, head_dim=64)
+    if cfg.use_mla:
+        kw.update(mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32))
+    if cfg.d_ff:
+        kw.update(d_ff=512)
+    if cfg.moe is not None:
+        kw.update(moe=dataclasses.replace(cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2), expert_d_ff=0))
+    if cfg.sliding_window:
+        kw.update(sliding_window=32)
+    return cfg.replace(name=cfg.name, **kw)
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Load ``repro.configs.<arch>`` (dashes/dots -> underscores)."""
+    mod_name = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg = mod.get_config()
+    assert cfg.name == arch, (cfg.name, arch)
+    return cfg

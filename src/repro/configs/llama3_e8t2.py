@@ -1,0 +1,17 @@
+"""llama3-e8t2 — the paper's upcycled 8-Expert Top-2 MoE (§4.2): every FFN
+becomes an 8-expert MoE initialized as copies of the dense FFN, Mixtral-type
+router, CF=4, trained with EP8. On the production 2-D mesh the experts fall
+back to expert-TP (8 does not divide 16); the paper-study 3-D mesh
+('data','expert','model') gives true EP8 — see benchmarks/table2."""
+from repro.config import ModelConfig, MoEConfig
+from repro.configs.llama3_8b import get_config as dense_config
+from repro.core.upcycle import upcycle_config
+
+
+def get_config() -> ModelConfig:
+    return upcycle_config(
+        dense_config(),
+        MoEConfig(num_experts=8, top_k=2, capacity_factor=4.0,
+                  router_type="mixtral", dispatcher="alltoall"),
+        name="llama3-e8t2",
+    )

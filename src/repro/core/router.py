@@ -1,0 +1,106 @@
+"""Routing algorithms (paper §2 Eq. 2-4 and §5.2).
+
+Two router types, differing in the order of Softmax and KeepTopK:
+
+* ``mixtral`` — ``softmax(topk(logits))``: gates are a softmax over the k
+  surviving logits, so they sum to 1. With all experts identical (the
+  upcycled init) the MoE output equals the dense FFN output exactly — the
+  property the paper relies on for fast convergence (Fig. 3).
+* ``st``      — ``topk(softmax(logits))``: keeps the absolute magnitudes of
+  the router probabilities (gates do NOT sum to 1 for k < N), so the
+  upcycled init no longer matches the dense model.
+
+Optionally Noisy Top-K gating (Eq. 3): logits += N(0,1) * softplus(x @ W_noise).
+
+Router math runs in fp32 regardless of the model dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+from repro.sharding.rules import ParamDecl
+
+
+def router_decl(d_model: int, moe: MoEConfig) -> Dict[str, ParamDecl]:
+    decls = {
+        "w_g": ParamDecl((d_model, moe.num_experts), ("embed", "expert"), "normal:0.02", jnp.float32)
+    }
+    if moe.noisy_gating:
+        decls["w_noise"] = ParamDecl(
+            (d_model, moe.num_experts), ("embed", "expert"), "zeros", jnp.float32
+        )
+    return decls
+
+
+def route(
+    moe: MoEConfig,
+    params,
+    x: jax.Array,
+    rng: Optional[jax.Array] = None,
+    train: bool = False,
+) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """x: (..., D). Returns (gates (..., k) fp32, expert_idx (..., k) int32, aux).
+
+    aux contains the Switch-style load-balance loss and the router z-loss,
+    both computed from the full (pre-top-k) softmax distribution.
+    """
+    xf = x.astype(jnp.float32)
+    logits = xf @ params["w_g"]  # (..., E)
+    if moe.noisy_gating and train and rng is not None:
+        noise_std = jax.nn.softplus(xf @ params["w_noise"])
+        logits = logits + jax.random.normal(rng, logits.shape) * noise_std
+
+    probs_full = jax.nn.softmax(logits, axis=-1)
+
+    if moe.router_type == "mixtral":
+        top_logits, idx = jax.lax.top_k(logits, moe.top_k)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+    elif moe.router_type == "st":
+        gates, idx = jax.lax.top_k(probs_full, moe.top_k)
+    else:
+        raise ValueError(f"unknown router_type {moe.router_type}")
+
+    # ---- aux losses -------------------------------------------------------
+    E = moe.num_experts
+    # fraction of token-assignments per expert (hard counts)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (..., k, E)
+    f = jnp.mean(jnp.sum(onehot, axis=-2), axis=tuple(range(onehot.ndim - 2)))
+    f = f / moe.top_k  # normalized dispatch fraction, sums to 1
+    p = jnp.mean(probs_full, axis=tuple(range(probs_full.ndim - 1)))
+    load_balance = E * jnp.sum(f * p)
+    z = jax.nn.logsumexp(logits, axis=-1)
+    z_loss = jnp.mean(jnp.square(z))
+    aux = {
+        "load_balance_loss": load_balance * moe.aux_loss_coef,
+        "z_loss": z_loss * moe.z_loss_coef,
+        "router_entropy": -jnp.mean(
+            jnp.sum(probs_full * jnp.log(probs_full + 1e-9), axis=-1)
+        ),
+        "expert_fraction_max": jnp.max(f),
+    }
+    return gates, idx.astype(jnp.int32), aux
+
+
+def route_full(moe: MoEConfig, params, x: jax.Array):
+    """Expert-Choice support: returns the FULL (T, E) probability matrix as
+    'gates' (dispatch picks per-expert top-C) plus the same aux losses.
+    idx is a dummy top-1 (unused by the EC dispatch path)."""
+    xf = x.astype(jnp.float32)
+    logits = xf @ params["w_g"]
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(logits, 1)
+    z = jax.nn.logsumexp(logits, axis=-1)
+    aux = {
+        # EC is load-balanced by construction; keep only the z-loss
+        "load_balance_loss": jnp.zeros((), jnp.float32),
+        "z_loss": jnp.mean(jnp.square(z)) * moe.z_loss_coef,
+        "router_entropy": -jnp.mean(
+            jnp.sum(probs_full * jnp.log(probs_full + 1e-9), axis=-1)
+        ),
+        "expert_fraction_max": jnp.float32(1.0 / moe.num_experts),
+    }
+    return probs_full, idx.astype(jnp.int32), aux

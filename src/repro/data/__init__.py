@@ -1,0 +1,1 @@
+from repro.data.pipeline import BlendedDataset, SyntheticSource, make_train_iter  # noqa: F401

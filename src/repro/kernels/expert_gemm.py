@@ -1,0 +1,123 @@
+"""Pallas TPU grouped expert GEMM with fused SwiGLU epilogue.
+
+The MoE expert FFN is the paper's dominant compute hot-spot (it is what the
+46.8%-MFU engineering in Table 2 is about). On H100 Megatron uses a CUTLASS
+grouped GEMM; the TPU adaptation re-tiles for the MXU and the HBM->VMEM
+hierarchy:
+
+* kernel 1 (``gate_up``): h = silu(x @ w_gate) * (x @ w_up). Both gemms
+  share the same x tile (one HBM read), accumulate in fp32 VMEM scratch over
+  the D-contraction grid dim, and the SwiGLU epilogue runs in VMEM — the
+  (E,C,F) gate/up intermediates NEVER round-trip to HBM (the fusion win:
+  saves 2*E*C*F bf16 writes + reads per layer vs. the XLA path).
+* kernel 2 (``down``): y = h @ w_down, a plain k-blocked grouped matmul.
+
+Tiles default to (bc, bf, bd) = (128, 512, 512) — MXU-aligned multiples of
+128, VMEM footprint ~= bc*bd + 2*bd*bf + 2*bc*bf(fp32) ~= 3.3 MB at bf16.
+Expert-parallel composition: the kernel sees the *local* expert shard
+(E_loc, ...); dispatch/combine collectives live a level up in core/moe.py.
+
+Validated in interpret mode against kernels/ref.py over shape/dtype sweeps
+(tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCKS = (128, 512, 512)  # (bc, bf, bd)
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _gate_up_kernel(x_ref, wg_ref, wu_ref, h_ref, g_acc, u_acc, *, nd: int):
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        u_acc[...] = jnp.zeros_like(u_acc)
+
+    x = x_ref[0]
+    g_acc[...] += jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    u_acc[...] += jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(d == nd - 1)
+    def _epilogue():
+        h_ref[0] = (_silu(g_acc[...]) * u_acc[...]).astype(h_ref.dtype)
+
+
+def _down_kernel(h_ref, wd_ref, y_ref, acc, *, nf: int):
+    f = pl.program_id(3)
+
+    @pl.when(f == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(h_ref[0], wd_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(f == nf - 1)
+    def _write():
+        y_ref[0] = acc[...].astype(y_ref.dtype)
+
+
+def _pick(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("blocks", "interpret")
+)
+def expert_gemm(
+    xe: jax.Array,  # (E, C, D)
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+    blocks: Tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jax.Array:
+    E, C, D = xe.shape
+    F = w_gate.shape[-1]
+    bc, bf, bd = (_pick(b, d) for b, d in zip(blocks, (C, F, D)))
+    nc, nf, nd = C // bc, F // bf, D // bd
+
+    h = pl.pallas_call(
+        functools.partial(_gate_up_kernel, nd=nd),
+        grid=(E, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, c, f, d: (e, c, d)),
+            pl.BlockSpec((1, bd, bf), lambda e, c, f, d: (e, d, f)),
+            pl.BlockSpec((1, bd, bf), lambda e, c, f, d: (e, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, c, f, d: (e, c, f)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), xe.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bc, bf), jnp.float32),
+            pltpu.VMEM((bc, bf), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xe, w_gate, w_up)
+
+    y = pl.pallas_call(
+        functools.partial(_down_kernel, nf=nf),
+        grid=(E, nc, nd, nf),
+        in_specs=[
+            pl.BlockSpec((1, bc, bf), lambda e, c, d, f: (e, c, f)),
+            pl.BlockSpec((1, bf, bd), lambda e, c, d, f: (e, f, d)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bd), lambda e, c, d, f: (e, c, d)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), xe.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        interpret=interpret,
+    )(h, w_down)
+    return y

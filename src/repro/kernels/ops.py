@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends (this container) the kernels execute in interpret mode
+— the kernel body runs in Python on CPU for correctness validation; on TPU
+they compile to Mosaic. ``core/moe.py`` calls ``expert_gemm`` when
+``use_kernel=True``; models can call ``flash_attention`` in place of the
+blockwise XLA path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import expert_gemm as _eg
+from repro.kernels import flash_attention as _fa
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def expert_gemm(xe, w_gate, w_up, w_down, blocks=_eg.DEFAULT_BLOCKS):
+    """(..., E, C, D) x (E,D,F)x2 x (E,F,D) -> (..., E, C, D)."""
+    lead = xe.shape[:-3]
+    E, C, D = xe.shape[-3:]
+    x3 = xe.reshape((-1, C, D)) if lead else xe
+    if lead:
+        G = x3.shape[0] // E if E else 1
+        # fold leading group dims into the token dim per expert
+        x3 = xe.reshape((-1, E, C, D)).transpose(1, 0, 2, 3).reshape(E, -1, D)
+        y = _eg.expert_gemm(x3, w_gate, w_up, w_down, blocks=blocks, interpret=_interpret())
+        y = y.reshape(E, -1, C, D).transpose(1, 0, 2, 3).reshape(lead + (E, C, D))
+        return y
+    return _eg.expert_gemm(xe, w_gate, w_up, w_down, blocks=blocks, interpret=_interpret())
+
+
+def flash_attention(
+    q, k, v, causal: bool = True, window: Optional[int] = None,
+    blocks=_fa.DEFAULT_BLOCKS,
+):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, blocks=blocks, interpret=_interpret()
+    )

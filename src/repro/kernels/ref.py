@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels. Each kernel's tests sweep
+shapes/dtypes and assert_allclose against these."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_gemm_ref(
+    xe: jax.Array,  # (E, C, D) tokens per expert
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+) -> jax.Array:
+    """Fused SwiGLU expert FFN: silu(x@wg) * (x@wu) @ wd, batched over E."""
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(xe.dtype)
+    return jnp.einsum(
+        "ecf,efd->ecd", h, w_down, preferred_element_type=jnp.float32
+    ).astype(xe.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Sq, H, d)
+    k: jax.Array,  # (B, Sk, H, d)  (kv heads pre-broadcast to H)
+    v: jax.Array,  # (B, Sk, H, d)
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, d = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else d**-0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    qp = jnp.arange(Sq)[:, None] + (Sk - Sq)  # right-aligned positions
+    kp = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    ).astype(v.dtype)

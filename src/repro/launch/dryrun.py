@@ -1,0 +1,202 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes (16x16 single-pod; 2x16x16 multi-pod) and record
+memory/cost/collective analysis for the roofline report.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first initialization.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.config import ARCH_IDS, SHAPES, InputShape, ModelConfig, TrainConfig, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import batch_specs, cache_specs, param_specs, rng_spec  # noqa: E402
+from repro.models.model import decode_step, model_decl, prefill_forward  # noqa: E402
+from repro.optim.adamw import AdamWState, opt_state_shardings  # noqa: E402
+from repro.roofline.analysis import roofline_from_hlo  # noqa: E402
+from repro.sharding.rules import FoldingPlan  # noqa: E402
+from repro.train.trainer import make_train_step  # noqa: E402
+
+SWA_FOR_LONG = 8192  # sliding window used by dense archs on long_500k
+
+# Dry-run combos skipped per DESIGN.md's sub-quadratic rule.
+SKIPS = {
+    ("seamless-m4t-medium", "long_500k"): "enc-dec full attention; 500k decoder stream over a short encoder memory is out of scope (DESIGN.md)",
+}
+
+
+def adapt_for_shape(cfg: ModelConfig, shape: InputShape) -> Optional[ModelConfig]:
+    """Apply the long_500k policy; None = documented skip."""
+    if (cfg.name, shape.name) in SKIPS:
+        return None
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid"):
+            return cfg  # O(1)/O(S) native
+        if cfg.use_mla:
+            return cfg  # compressed latent cache, seq-sharded
+        if cfg.family == "encdec":
+            return None
+        # dense/moe/vlm: sub-quadratic via the sliding-window variant
+        return cfg.replace(sliding_window=SWA_FOR_LONG)
+    return cfg
+
+
+def _opt_specs(cfg: ModelConfig, plan: FoldingPlan, params_abs):
+    sh = opt_state_shardings(model_decl(cfg), plan, zero1=True)
+    f32 = lambda a, s: jax.ShapeDtypeStruct(a.shape, jnp.float32, sharding=s)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=sh.step),
+        master=jax.tree.map(f32, params_abs, sh.master),
+        m=jax.tree.map(f32, params_abs, sh.m),
+        v=jax.tree.map(f32, params_abs, sh.v),
+    )
+
+
+def lower_combo(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    dispatcher: Optional[str] = None,
+    cfg_override: Optional[ModelConfig] = None,
+    verbose: bool = True,
+    save_hlo_dir: Optional[str] = None,
+):
+    """Lower+compile one combo. Returns a result record (dict)."""
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or get_config(arch)
+    cfg = adapt_for_shape(cfg, shape)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod, "status": "skipped",
+                "reason": SKIPS.get((arch, shape_name), "long-context policy")}
+    if dispatcher and cfg.moe is not None:
+        import dataclasses
+
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatcher=dispatcher))
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = FoldingPlan.make(cfg, mesh)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    params_abs = param_specs(cfg, plan)
+    if shape.kind == "train":
+        tcfg = TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len)
+        step = make_train_step(cfg, tcfg, plan)
+        args = (params_abs, _opt_specs(cfg, plan, params_abs),
+                batch_specs(cfg, shape, plan), rng_spec(plan))
+        fn = jax.jit(step, donate_argnums=(0, 1))
+    elif shape.kind == "prefill":
+        fn = jax.jit(lambda p, b: prefill_forward(cfg, plan, p, b))
+        args = (params_abs, batch_specs(cfg, shape, plan))
+    else:  # decode
+        fn = jax.jit(
+            lambda p, c, t: decode_step(cfg, plan, p, c, t), donate_argnums=(1,)
+        )
+        args = (params_abs, cache_specs(cfg, shape, plan), batch_specs(cfg, shape, plan)["tokens"])
+
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if save_hlo_dir:
+        import gzip
+
+        os.makedirs(save_hlo_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'2pod' if multi_pod else '1pod'}"
+        with gzip.open(os.path.join(save_hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+    terms, coll = roofline_from_hlo(hlo, chips)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "chips": chips,
+        "attn_mode": plan.attn_mode,
+        "moe_mode": plan.moe_mode if cfg.moe else None,
+        "dispatcher": cfg.moe.dispatcher if cfg.moe else None,
+        "fsdp": plan.fsdp,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0),
+        },
+        "cost": {k: cost[k] for k in ("flops", "bytes accessed") if k in cost},
+        "collectives": coll,
+        "roofline": terms.as_dict(),
+    }
+    if verbose:
+        gb = 1 << 30
+        print(
+            f"[{arch} x {shape_name} x {'2pod' if multi_pod else '1pod'}] OK "
+            f"compile={rec['compile_s']}s args={rec['memory']['argument_bytes']/gb:.2f}GB "
+            f"temp={rec['memory']['temp_bytes']/gb:.2f}GB flops={terms.flops:.3e} "
+            f"coll={coll['total']/gb:.3f}GB dominant={terms.dominant}",
+            flush=True,
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--dispatcher", default=None, choices=[None, "allgather", "alltoall"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", default=None, help="dir for gzipped HLO text")
+    args = ap.parse_args()
+
+    archs = [a for a in ARCH_IDS if a not in ("llama3-8b", "llama3-e8t2")] if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2pod' if mp else '1pod'}"
+                try:
+                    rec = lower_combo(arch, shape, mp, args.dispatcher,
+                                      save_hlo_dir=args.save_hlo)
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    rec = {
+                        "arch": arch, "shape": shape, "multi_pod": mp,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                    }
+                    print(f"[{tag}] FAIL {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Device meshes.
+
+``make_production_mesh`` — the deliverable mesh: 16x16 ('data','model') per
+pod, 2x16x16 ('pod','data','model') for the two-pod run. A function, not a
+module constant, so importing this module never touches jax device state.
+
+``make_study_mesh`` — paper-study 3-D meshes ('data','expert','model') used
+by the Table-2 folding benchmarks, where the attention layers fold the
+'expert' axis into their data-parallel group while the MoE layers use it as
+EP (the paper's TP2CP2 <-> TP1EP8 example).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    assert len(devices) >= n, (
+        f"need {n} devices (run under XLA_FLAGS=--xla_force_host_platform_device_count=512); "
+        f"have {len(devices)}"
+    )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_study_mesh(data: int, expert: int, model: int) -> Mesh:
+    n = data * expert * model
+    devices = jax.devices()
+    assert len(devices) >= n, (n, len(devices))
+    return jax.make_mesh((data, expert, model), ("data", "expert", "model"), devices=devices[:n])
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh on the real local device — used by tests/examples so the
+    sharding code paths run identically at laptop scale."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

@@ -1,0 +1,97 @@
+"""Abstract input specs (ShapeDtypeStruct + sharding) for every
+(architecture x input shape) pair — the dry-run's stand-ins. No device
+memory is allocated (the shannon/kernels pattern).
+
+Shape semantics per kind:
+* train    — train_step(params, opt_state, batch, rng)
+* prefill  — prefill_forward(params, batch) -> (logits, cache)
+* decode   — decode_step(params, cache, tokens) -> (logits, cache); the
+             cache stands at seq_len tokens (ring-window for SWA configs).
+
+Multimodal stubs: vlm batches put ``num_prefix_embeds`` positions of the
+sequence budget into precomputed patch embeddings; encdec splits the budget
+between encoder frames and decoder tokens. Decode for encdec uses a 4096-
+frame encoder memory (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import InputShape, ModelConfig
+from repro.models.model import cache_decl, model_decl
+from repro.sharding.rules import (
+    FoldingPlan,
+    ParamDecl,
+    abstract_from_decls,
+    shardings_from_decls,
+)
+
+ENCDEC_DECODE_MEMORY = 4096
+
+
+def _sds(shape, dtype, plan: Optional[FoldingPlan], *axes):
+    if plan is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=plan.sharding(shape, *axes))
+
+
+def batch_specs(
+    cfg: ModelConfig, shape: InputShape, plan: Optional[FoldingPlan]
+) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": _sds((B,), jnp.int32, plan, "batch")}
+    if cfg.family == "vlm":
+        P = cfg.num_prefix_embeds
+        St = S - P
+        out = {
+            "tokens": _sds((B, St), jnp.int32, plan, "batch", None),
+            "embeds": _sds((B, P, cfg.d_model), jnp.float32, plan, "batch", None, None),
+        }
+        if shape.kind == "train":
+            out["labels"] = _sds((B, St), jnp.int32, plan, "batch", None)
+        return out
+    if cfg.family == "encdec":
+        Se = Sd = S // 2
+        out = {
+            "tokens": _sds((B, Sd), jnp.int32, plan, "batch", None),
+            "frames": _sds((B, Se, cfg.d_model), jnp.float32, plan, "batch", None, None),
+        }
+        if shape.kind == "train":
+            out["labels"] = _sds((B, Sd), jnp.int32, plan, "batch", None)
+        return out
+    out = {"tokens": _sds((B, S), jnp.int32, plan, "batch", None)}
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32, plan, "batch", None)
+    return out
+
+
+def param_specs(cfg: ModelConfig, plan: Optional[FoldingPlan]):
+    decls = model_decl(cfg)
+    abstract = abstract_from_decls(decls)
+    if plan is None:
+        return abstract
+    sh = shardings_from_decls(decls, plan)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s), abstract, sh
+    )
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, plan: Optional[FoldingPlan]):
+    assert shape.kind == "decode"
+    enc_len = ENCDEC_DECODE_MEMORY if cfg.family == "encdec" else 0
+    decls = cache_decl(cfg, shape.global_batch, shape.seq_len, enc_len)
+
+    def to_sds(d: ParamDecl):
+        if plan is None:
+            return jax.ShapeDtypeStruct(d.shape, d.dtype)
+        return jax.ShapeDtypeStruct(d.shape, d.dtype, sharding=plan.sharding(d.shape, *d.axes))
+
+    return jax.tree.map(to_sds, decls, is_leaf=lambda d: isinstance(d, ParamDecl))
+
+
+def rng_spec(plan: Optional[FoldingPlan]):
+    return _sds((2,), jnp.uint32, plan, None)

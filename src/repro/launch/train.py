@@ -1,0 +1,96 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \\
+      --steps 100 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \\
+      --upcycle 4 --top-k 2 --cf 4 --from-ckpt /tmp/dense_ckpt --steps 200
+
+``--smoke`` selects the reduced config (CPU-runnable); without it the full
+assigned config is used (cluster scale). ``--upcycle N`` converts the dense
+config to an N-expert MoE, optionally initializing from ``--from-ckpt`` via
+online upcycling.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.config import MoEConfig, TrainConfig, get_config, smoke_config
+from repro.data.pipeline import make_train_iter
+from repro.train.trainer import Trainer
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--upcycle", type=int, default=0, help="num experts")
+    ap.add_argument("--top-k", type=int, default=2)
+    ap.add_argument("--cf", type=float, default=4.0, help="<=0 => dropless")
+    ap.add_argument("--router", default="mixtral", choices=["mixtral", "st"])
+    ap.add_argument("--dispatcher", default="allgather", choices=["allgather", "alltoall"])
+    ap.add_argument("--from-ckpt", default=None)
+    ap.add_argument("--save-ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true")
+    return ap
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+
+    params = None
+    if args.upcycle:
+        from repro.core.upcycle import upcycle_config, upcycle_params
+
+        moe = MoEConfig(
+            num_experts=args.upcycle, top_k=args.top_k,
+            capacity_factor=args.cf if args.cf > 0 else None,
+            router_type=args.router, dispatcher=args.dispatcher,
+        )
+        dense_cfg = cfg
+        cfg = upcycle_config(dense_cfg, moe)
+        if args.from_ckpt:
+            from repro.checkpoint.ckpt import load_checkpoint
+
+            dense_params = load_checkpoint(args.from_ckpt)
+            params = upcycle_params(dense_cfg, cfg, dense_params, jax.random.PRNGKey(args.seed))
+            print(f"upcycled {dense_cfg.name} -> {cfg.name} from {args.from_ckpt}")
+
+    tcfg = TrainConfig(
+        global_batch=args.batch, seq_len=args.seq, lr=args.lr, lr_min=args.lr / 100,
+        warmup_steps=min(100, args.steps // 10 + 1), total_steps=args.steps,
+        seed=args.seed, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.save_ckpt or "/tmp/repro_ckpt",
+    )
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"embeds": (args.batch, cfg.num_prefix_embeds, cfg.d_model)}
+    if cfg.family == "encdec":
+        extra = {"frames": (args.batch, args.seq, cfg.d_model)}
+    it = make_train_iter(cfg.vocab_size, args.seq, args.batch,
+                         tcfg.blend_ratio, args.seed, extra)
+    t, a = cfg.param_counts()
+    print(f"training {cfg.name}: {t/1e6:.1f}M total / {a/1e6:.1f}M active params")
+    tr = Trainer(cfg, tcfg, params=params, data_iter=it, use_kernel=args.use_kernel)
+    tr.run(args.steps)
+    if args.save_ckpt:
+        from repro.checkpoint.ckpt import save_checkpoint
+
+        save_checkpoint(args.save_ckpt, tr.params, step=args.steps)
+        print(f"saved checkpoint to {args.save_ckpt}")
+    print(f"final held-out CE: {tr.eval_loss(batches=4):.4f}")
+    return tr
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Shared transformer building blocks: norms, RoPE, embeddings, SwiGLU MLP.
+
+Functional style: every component has ``<name>_decl`` returning a pytree of
+:class:`ParamDecl` (shape + logical sharding axes + init) and a pure
+``<name>_apply``. All matmul compute runs in the model dtype (bf16 by
+default); norms, softmax and the loss accumulate in fp32, matching the
+paper's bf16 + Megatron-default numerics.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import ParamDecl
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_decl(d_model: int, norm_type: str = "rmsnorm") -> Dict[str, ParamDecl]:
+    decls = {"scale": ParamDecl((d_model,), ("embed",), "ones", jnp.float32)}
+    if norm_type == "layernorm":
+        decls["bias"] = ParamDecl((d_model,), ("embed",), "zeros", jnp.float32)
+    return decls
+
+
+def norm_apply(params, x: jax.Array, norm_type: str = "rmsnorm", eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # positions broadcast: (..., seq) -> (..., seq, 1, half)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_decl(padded_vocab: int, d_model: int, tie: bool) -> Dict[str, ParamDecl]:
+    decls = {
+        "embedding": ParamDecl(
+            (padded_vocab, d_model), ("vocab", "embed"), "normal:0.02", jnp.float32
+        )
+    }
+    if not tie:
+        decls["unembedding"] = ParamDecl(
+            (padded_vocab, d_model), ("vocab", "embed"), "normal:0.02", jnp.float32
+        )
+    return decls
+
+
+def embed_apply(params, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def unembed_apply(params, x: jax.Array) -> jax.Array:
+    """Returns fp32 logits over the padded vocab."""
+    table = params.get("unembedding", params["embedding"])
+    return jnp.einsum(
+        "...d,vd->...v", x, table.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (the FFN the paper upcycles into experts)
+# ---------------------------------------------------------------------------
+
+
+def mlp_decl(d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Dict[str, ParamDecl]:
+    return {
+        "w_gate": ParamDecl((d_model, d_ff), ("embed", "ff"), "fan_in", dtype),
+        "w_up": ParamDecl((d_model, d_ff), ("embed", "ff"), "fan_in", dtype),
+        "w_down": ParamDecl((d_ff, d_model), ("ff", "embed"), "fan_in", dtype),
+    }
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("...f,fd->...d", hidden, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int) -> jax.Array:
+    """Mean CE over tokens; logits fp32 over the padded vocab. Padded vocab
+    entries participate in the partition function (Megatron semantics) but
+    never appear as labels."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + jnp.squeeze(
+        jax.lax.stop_gradient(m), -1
+    )
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - label_logit)

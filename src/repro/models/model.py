@@ -1,0 +1,312 @@
+"""Top-level language model: embeddings + stack(s) + head, with three entry
+points used by the launcher and dry-run:
+
+* ``forward``     — training/prefill forward over full sequences.
+* ``loss_fn``     — CE over the (padded, vocab-sharded) logits + MoE aux.
+* ``decode_step`` — one new token against the KV/SSM cache (serve_step).
+
+Multimodal stubs (DESIGN.md carve-out): ``vlm`` consumes a precomputed patch
+-embedding prefix; ``encdec`` (audio) consumes precomputed frame embeddings
+on the encoder side. Both are supplied by ``input_specs`` as arrays of the
+right shape — the backbone is fully implemented, the frontend is not.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import (
+    cross_entropy,
+    embed_apply,
+    embed_decl,
+    norm_apply,
+    norm_decl,
+    unembed_apply,
+)
+from repro.models.transformer import (
+    BlockSpec,
+    build_slots,
+    periods_for,
+    stack_apply,
+    stack_cache_decl,
+    stack_decl,
+)
+from repro.sharding.rules import FoldingPlan, ParamDecl
+
+
+def model_decl(cfg: ModelConfig) -> Dict[str, Any]:
+    slots = build_slots(cfg)
+    periods = periods_for(cfg, slots)
+    decls: Dict[str, Any] = {
+        "embed": embed_decl(cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings),
+        "stack": stack_decl(cfg, slots, periods),
+        "final_norm": norm_decl(cfg.d_model, cfg.norm_type),
+    }
+    if cfg.family == "encdec":
+        enc_slots = [BlockSpec("attn", "dense", causal=False)]
+        assert cfg.num_encoder_layers > 0
+        decls["encoder"] = stack_decl(cfg, enc_slots, cfg.num_encoder_layers)
+        decls["encoder_norm"] = norm_decl(cfg.d_model, cfg.norm_type)
+    return decls
+
+
+def _encode(cfg, plan, params, frames: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Run the (non-causal) encoder over stub frame embeddings (B,Se,D)."""
+    B, Se, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    enc_slots = [BlockSpec("attn", "dense", causal=False)]
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    if plan is not None:
+        x = plan.constrain(x, "batch", None, None)
+    x, _, _ = stack_apply(cfg, plan, enc_slots, params["encoder"], x, pos)
+    x = norm_apply(params["encoder_norm"], x, cfg.norm_type, cfg.norm_eps)
+    return x, pos
+
+
+def forward(
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan],
+    params,
+    batch: Dict[str, jax.Array],
+    rng: Optional[jax.Array] = None,
+    train: bool = False,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (logits over text positions, aux). batch keys:
+    tokens (B,St); vlm: + embeds (B,P,D); encdec: + frames (B,Se,D)."""
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens, dtype)
+    prefix = 0
+    cross_ctx = None
+    if cfg.family == "vlm":
+        emb = batch["embeds"].astype(x.dtype)
+        prefix = emb.shape[1]
+        x = jnp.concatenate([emb, x], axis=1)
+    elif cfg.family == "encdec":
+        cross_ctx = _encode(cfg, plan, params, batch["frames"])
+    S = x.shape[1]
+    if plan is not None:
+        x = plan.constrain(x, "fold_batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    slots = build_slots(cfg)
+    x, _, aux = stack_apply(
+        cfg, plan, slots, params["stack"], x, positions, rng, train,
+        cross_ctx=cross_ctx, use_kernel=use_kernel,
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    if prefix:
+        x = x[:, prefix:]
+    logits = unembed_apply(params["embed"] if cfg.tie_embeddings else params["embed"], x)
+    if plan is not None:
+        logits = plan.constrain(logits, "fold_batch", None, "vocab")
+    return logits, aux
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan],
+    params,
+    batch: Dict[str, jax.Array],
+    rng: Optional[jax.Array] = None,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(cfg, plan, params, batch, rng, train=True, use_kernel=use_kernel)
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    loss = ce + sum(aux.values())
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def cache_decl(
+    cfg: ModelConfig, batch: int, cache_len: int, enc_len: int = 0
+) -> Dict[str, Any]:
+    """Cache structure for decode. cache_len = min(seq_len, sliding_window)."""
+    if cfg.sliding_window is not None:
+        cache_len = min(cache_len, cfg.sliding_window)
+    slots = build_slots(cfg)
+    periods = periods_for(cfg, slots)
+    decls: Dict[str, Any] = {
+        "pos": ParamDecl((batch,), ("batch",), "zeros", jnp.int32),
+        "slot_pos": ParamDecl((batch, cache_len), ("batch", "cache_seq"), "zeros", jnp.int32),
+        "stack": stack_cache_decl(cfg, slots, periods, batch, cache_len, enc_len),
+    }
+    return decls
+
+
+def decode_step(
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan],
+    params,
+    cache: Dict[str, Any],
+    tokens: jax.Array,  # (B,) next input token ids
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step: writes token at cache position, returns fp32 logits
+    (B, padded_vocab) for the next token and the updated cache."""
+    B = tokens.shape[0]
+    pos = cache["pos"]  # (B,)
+    W = cache["slot_pos"].shape[1]
+    slot = (pos % W).astype(jnp.int32)
+    slot_pos = cache["slot_pos"].at[jnp.arange(B), slot].set(pos)
+    # unfilled slots must stay invalid: init slot_pos to -1 via pos==0 reset
+    slot_pos = jnp.where(
+        (cache["pos"][:, None] == 0)
+        & (jnp.arange(W)[None, :] != slot[:, None]),
+        -1,
+        slot_pos,
+    )
+    cache_view = {"slot": slot, "slot_pos": slot_pos}
+    if cfg.family == "encdec":
+        enc_len = jax.tree.leaves(cache["stack"]["slot0"]["cross"])[0].shape[2]
+        cache_view["enc_pos"] = jnp.broadcast_to(
+            jnp.arange(enc_len, dtype=jnp.int32), (B, enc_len)
+        )
+
+    x = embed_apply(params["embed"], tokens[:, None], jnp.dtype(cfg.dtype))  # (B,1,D)
+    if plan is not None:
+        x = plan.constrain(x, "batch", None, None)
+    positions = pos[:, None]
+
+    slots = build_slots(cfg)
+    x, new_stack, _ = stack_apply(
+        cfg, plan, slots, params["stack"], x, positions,
+        cache=cache["stack"], cache_view=cache_view, use_kernel=use_kernel,
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x)[:, 0]
+    if plan is not None:
+        logits = plan.constrain(logits, "batch", "vocab")
+    new_cache = {"pos": pos + 1, "slot_pos": slot_pos, "stack": new_stack}
+    return logits, new_cache
+
+
+def prefill_forward(
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan],
+    params,
+    batch: Dict[str, jax.Array],
+    cache_len: Optional[int] = None,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Fused prefill: one full-sequence forward that also emits a decode-
+    ready cache (prefill_32k lowers this). For sliding-window configs the
+    last W keys are ring-packed into their slots."""
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens, dtype)
+    prefix = 0
+    cross_ctx = None
+    if cfg.family == "vlm":
+        emb = batch["embeds"].astype(x.dtype)
+        prefix = emb.shape[1]
+        x = jnp.concatenate([emb, x], axis=1)
+    elif cfg.family == "encdec":
+        cross_ctx = _encode(cfg, plan, params, batch["frames"])
+    S = x.shape[1]
+    if plan is not None:
+        x = plan.constrain(x, "fold_batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    slots = build_slots(cfg)
+    x, seq_cache, _ = stack_apply(
+        cfg, plan, slots, params["stack"], x, positions,
+        cross_ctx=cross_ctx, use_kernel=use_kernel, return_cache=True,
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x[:, -1:])[:, 0]
+
+    # ---- pack the per-layer seq caches into the ring-buffer layout -------
+    W = cache_len or S
+    if cfg.sliding_window is not None:
+        W = min(W, cfg.sliding_window)
+    Wc = min(W, S)
+    ring_slots = (S - Wc + jnp.arange(Wc)) % W  # where the last Wc keys go
+
+    def pack(full):  # full: (P, B, S, ...) stacked seq cache
+        buf = jnp.zeros(full.shape[:2] + (W,) + full.shape[3:], full.dtype)
+        return buf.at[:, :, ring_slots].set(full[:, :, S - Wc :])
+
+    def pack_tree(c):
+        out = {}
+        for k, v in c.items():
+            if k == "ssm":
+                out[k] = v  # state caches carry no seq dim
+            elif k == "cross":
+                out[k] = v
+            else:
+                out[k] = jax.tree.map(pack, v)
+        return out
+
+    stack_cache = {sk: pack_tree(c) for sk, c in (seq_cache or {}).items()}
+    if cfg.family == "encdec":
+        enc_out, _ = cross_ctx
+        for i in range(len(slots)):
+            sk = f"slot{i}"
+            ck = jnp.einsum("bsd,pdhk->pbshk", enc_out, params["stack"][sk]["cross"]["wk"])
+            cv = jnp.einsum("bsd,pdhk->pbshk", enc_out, params["stack"][sk]["cross"]["wv"])
+            stack_cache[sk]["cross"] = {"k": ck, "v": cv}
+    slot_pos = jnp.full((B, W), -1, jnp.int32)
+    slot_pos = slot_pos.at[:, ring_slots].set(
+        jnp.broadcast_to(jnp.arange(S - Wc, S, dtype=jnp.int32), (B, Wc))
+    )
+    cache = {
+        "pos": jnp.full((B,), S, jnp.int32),
+        "slot_pos": slot_pos,
+        "stack": stack_cache,
+    }
+    return logits, cache
+
+
+def prefill_reference(
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan],
+    params,
+    batch: Dict[str, jax.Array],
+    cache_len: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Fill a decode cache by running decode_step over the prompt via scan.
+    Oracle for prefill_forward in tests."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    from repro.sharding.rules import init_from_decls
+
+    decls = cache_decl(cfg, B, cache_len, enc_len=batch.get("frames", jnp.zeros((B, 0, cfg.d_model))).shape[1])
+    cache = jax.tree.map(
+        lambda d: jnp.zeros(d.shape, d.dtype),
+        decls,
+        is_leaf=lambda d: isinstance(d, ParamDecl),
+    )
+    # slot_pos starts invalid
+    cache["slot_pos"] = jnp.full_like(cache["slot_pos"], -1)
+    if cfg.family == "encdec":
+        enc_out, _ = _encode(cfg, plan, params, batch["frames"])
+        new_cross = {}
+        slots = build_slots(cfg)
+        periods = periods_for(cfg, slots)
+        for i in range(len(slots)):
+            sk = f"slot{i}"
+            wk = params["stack"][sk]["cross"]["wk"]
+            wv = params["stack"][sk]["cross"]["wv"]
+            ck = jnp.einsum("bsd,pdhk->pbshk", enc_out, wk)
+            cv = jnp.einsum("bsd,pdhk->pbshk", enc_out, wv)
+            cache["stack"][sk]["cross"] = {"k": ck, "v": cv}
+
+    def step(cache, tok):
+        logits, cache = decode_step(cfg, plan, params, cache, tok)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(step, cache, tokens.T)
+    return logits[-1], cache

@@ -1,0 +1,230 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+(attention-like) term + inter-chunk linear recurrence carried by a
+``lax.scan`` over chunks. Decode is the O(1)-state recurrent step — this is
+what makes long_500k tractable for the SSM/hybrid architectures.
+
+Sharding: d_inner ('ssm_inner') and SSD heads ('ssm_heads') shard the
+'model' axis (Mamba-2 official TP); the small per-group B/C projections are
+replicated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import norm_apply, norm_decl
+from repro.sharding.rules import FoldingPlan, ParamDecl
+
+
+def ssm_decl(cfg: ModelConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    assert s is not None
+    D = cfg.d_model
+    di, nh, ng, dn = s.d_inner(D), s.nheads(D), s.ngroups, s.d_state
+    conv_dim = di + 2 * ng * dn
+    dt = jnp.bfloat16
+    # softplus^-1(x) ~= log(x) for small x: dt in [1e-3, 1e-1]
+    lo, hi = math.log(s.dt_min), math.log(s.dt_max)
+    return {
+        "in_proj_z": ParamDecl((D, di), ("embed", "ssm_inner"), "fan_in", dt),
+        "in_proj_x": ParamDecl((D, conv_dim), ("embed", "ssm_inner"), "fan_in", dt),
+        "in_proj_dt": ParamDecl((D, nh), ("embed", "ssm_heads"), "fan_in", dt),
+        "conv_w": ParamDecl((conv_dim, s.d_conv), ("ssm_inner", None), "fan_in", jnp.float32),
+        "conv_b": ParamDecl((conv_dim,), ("ssm_inner",), "zeros", jnp.float32),
+        "dt_bias": ParamDecl((nh,), ("ssm_heads",), f"uniform:{lo}:{hi}", jnp.float32),
+        "A_log": ParamDecl((nh,), ("ssm_heads",), "uniform:0.0:2.77", jnp.float32),
+        "D_skip": ParamDecl((nh,), ("ssm_heads",), "ones", jnp.float32),
+        "gate_norm": norm_decl(di),
+        "out_proj": ParamDecl((di, D), ("ssm_inner", "embed"), "fan_in", dt),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable 'segment sum' producing the (..., s, s) lower-tri decay logits:
+    out[..., i, j] = sum_{k=j+1..i} x[..., k] for j < i, -inf above diag."""
+    s = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)  — already multiplied by nothing; dt applied inside
+    dt: jax.Array,  # (B, L, H) fp32, post-softplus
+    A: jax.Array,  # (H,) fp32 (negative)
+    Bm: jax.Array,  # (B, L, G, N)
+    Cm: jax.Array,  # (B, L, G, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+
+    # §Perf M2: einsum inputs in the ACTIVATION dtype (bf16 in production,
+    # fp32 in tests) with fp32 accumulation; decay math stays fp32. This is
+    # the same precision policy as the official SSD GPU kernel.
+    cd = x.dtype
+    dA = dt * A  # (B,L,H) fp32
+    xdt = (x.astype(jnp.float32) * dt[..., None]).astype(cd)  # (B,L,H,P)
+
+    def c_(t, feat_dims):  # reshape to chunks
+        return t.reshape((b, nc, chunk) + feat_dims)
+
+    x_c = c_(xdt, (h, p))
+    dA_c = c_(dA, (h,)).transpose(0, 3, 1, 2)  # (B,H,nc,cs) fp32
+    B_c = jnp.repeat(c_(Bm.astype(cd), (g, n)), rep, axis=3)  # (B,nc,cs,H,N)
+    C_c = jnp.repeat(c_(Cm.astype(cd), (g, n)), rep, axis=3)
+
+    # ---- intra-chunk (diagonal blocks): quadratic attention-like term ----
+    L = jnp.exp(_segsum(dA_c)).astype(cd)  # (B,H,nc,cs,cs)
+    Y_diag = jnp.einsum(
+        "bcihn,bcjhn,bhcij,bcjhp->bcihp", C_c, B_c, L, x_c,
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- chunk states and inter-chunk recurrence ----
+    dA_cum = jnp.cumsum(dA_c, axis=-1)  # (B,H,nc,cs) fp32
+    decay_to_end = jnp.exp(dA_cum[..., -1:] - dA_cum).astype(cd)  # (B,H,nc,cs)
+    states = jnp.einsum(
+        "bcjhn,bhcj,bcjhp->bchpn", B_c, decay_to_end, x_c,
+        preferred_element_type=jnp.float32,
+    )
+    chunk_decay = jnp.exp(dA_cum[..., -1])  # (B,H,nc) fp32
+
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    def step(carry, xs):
+        st, dec = xs  # st: (B,H,P,N), dec: (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    state_decay = jnp.exp(dA_cum).astype(cd)  # decay chunk-start -> i
+    Y_off = jnp.einsum(
+        "bcihn,bchpn,bhci->bcihp", C_c, prev_states.astype(cd), state_decay,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssm_apply(
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan],
+    params,
+    x: jax.Array,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B,S,D). cache => single-token recurrent decode.
+    cache = {'conv': (B, d_conv-1, conv_dim), 'state': (B,H,P,N)}."""
+    s = cfg.ssm
+    assert s is not None
+    B_, S, D = x.shape
+    di, nh, ng, dn = s.d_inner(D), s.nheads(D), s.ngroups, s.d_state
+    hp = s.headdim
+    conv_dim = di + 2 * ng * dn
+
+    z = jnp.einsum("bsd,de->bse", x, params["in_proj_z"])
+    xBC = jnp.einsum("bsd,de->bse", x, params["in_proj_x"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["in_proj_dt"]).astype(jnp.float32)
+    if plan is not None:
+        z = plan.constrain(z, "batch", None, "ssm_inner")
+        xBC = plan.constrain(xBC, "batch", None, "ssm_inner")
+
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])
+
+    if cache is None:
+        # causal depthwise conv over the sequence
+        w = params["conv_w"].astype(x.dtype)  # (conv_dim, k)
+        pad = s.d_conv - 1
+        xp = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+        conv = sum(
+            xp[:, i : i + S, :] * w[:, i] for i in range(s.d_conv)
+        ) + params["conv_b"].astype(x.dtype)
+        # activation-dtype silu (§Perf M1): fp32 here costs 2 full (B,S,conv)
+        # round-trips per layer; bf16 sigmoid is well-conditioned.
+        xBC = jax.nn.silu(conv)
+        xs = xBC[..., :di].reshape(B_, S, nh, hp)
+        Bm = xBC[..., di : di + ng * dn].reshape(B_, S, ng, dn)
+        Cm = xBC[..., di + ng * dn :].reshape(B_, S, ng, dn)
+        y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, min(s.chunk_size, S))
+        new_cache = None
+        if return_state:
+            # conv tail: last (d_conv-1) PRE-activation conv inputs
+            tail = xp[:, S : S + pad, :] if pad else xp[:, :0, :]
+            new_cache = {"conv": tail, "state": final_state}
+    else:
+        assert S == 1
+        # conv ring: cache['conv'] holds the last (d_conv-1) xBC rows
+        conv_buf = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B, k, conv_dim)
+        w = params["conv_w"].astype(jnp.float32)  # (conv_dim, k)
+        conv = jnp.einsum("bkc,ck->bc", conv_buf.astype(jnp.float32), w) + params["conv_b"]
+        xBC_t = jax.nn.silu(conv).astype(x.dtype)  # (B, conv_dim)
+        xs = xBC_t[:, :di].reshape(B_, nh, hp).astype(jnp.float32)
+        Bm = xBC_t[:, di : di + ng * dn].reshape(B_, ng, dn).astype(jnp.float32)
+        Cm = xBC_t[:, di + ng * dn :].reshape(B_, ng, dn).astype(jnp.float32)
+        rep = nh // ng
+        Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+        Ch = jnp.repeat(Cm, rep, axis=1)
+        dt1 = dt[:, 0]  # (B,H)
+        dA = jnp.exp(dt1 * A)  # (B,H)
+        state = cache["state"].astype(jnp.float32)
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xs * dt1[..., None], Bh
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch)[:, None]  # (B,1,H,P)
+        xs = xs[:, None]  # align shapes with train path for skip term
+        new_cache = {"conv": conv_buf[:, 1:], "state": state}
+
+    if cache is None:
+        y = y + params["D_skip"][None, None, :, None] * xs.astype(jnp.float32) * 1.0
+    else:
+        y = y + params["D_skip"][None, None, :, None] * xs
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z)); gate in activation dtype (M1)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(params["gate_norm"], y, "rmsnorm", cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, new_cache
+
+
+def ssm_cache_decl(cfg: ModelConfig, batch: int) -> Dict[str, ParamDecl]:
+    s = cfg.ssm
+    assert s is not None
+    D = cfg.d_model
+    di, nh, ng, dn = s.d_inner(D), s.nheads(D), s.ngroups, s.d_state
+    conv_dim = di + 2 * ng * dn
+    return {
+        "conv": ParamDecl(
+            (batch, s.d_conv - 1, conv_dim), ("batch", None, "ssm_inner"), "zeros",
+            jnp.dtype(cfg.dtype)
+        ),
+        "state": ParamDecl(
+            (batch, nh, s.headdim, dn), ("batch", "ssm_heads", None, None), "zeros", jnp.float32
+        ),
+    }

@@ -1,0 +1,114 @@
+"""AdamW with bf16 compute params + fp32 master weights and ZeRO-1-style
+optimizer-state sharding (paper §3.2: "DP with ZeRO-1 ... replicates model
+weights and shards optimizer states across DP ranks").
+
+State layout per parameter:
+  master — fp32 copy (authoritative), m/v — fp32 moments.
+
+ZeRO-1 on TPU: compute params keep their TP/EP sharding and stay replicated
+over 'data'; the optimizer state additionally shards its largest divisible
+dim over the 'data' axis. XLA then keeps the optimizer update fully
+data-sharded and re-broadcasts (all-gathers) only the updated bf16 params —
+the same communication shape as Megatron's distributed optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import TrainConfig
+from repro.sharding.rules import FoldingPlan, ParamDecl, resolve_spec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    master: Any
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(jnp.zeros((), jnp.int32), f32(params), zeros(params), zeros(params))
+
+
+def _zero1_spec(decl: ParamDecl, plan: FoldingPlan) -> P:
+    """Param spec + shard the largest remaining dim over 'data' (ZeRO-1).
+    No-op for dims already data-sharded (e.g. FSDP params)."""
+    from repro.sharding.rules import _resolve_decl, fsdp_spec
+
+    base = _resolve_decl(decl, plan)
+    return fsdp_spec(base, decl.shape, plan.mesh, "data")
+
+
+def opt_state_shardings(decls, plan: Optional[FoldingPlan], zero1: bool = True):
+    """Shardings for AdamWState given the model's ParamDecl tree."""
+    if plan is None:
+        return None
+
+    def param_sh(d: ParamDecl):
+        if zero1:
+            spec = _zero1_spec(d, plan)
+        else:
+            from repro.sharding.rules import _resolve_decl
+
+            spec = _resolve_decl(d, plan)
+        return NamedSharding(plan.mesh, spec)
+
+    is_leaf = lambda d: isinstance(d, ParamDecl)
+    tree = jax.tree.map(param_sh, decls, is_leaf=is_leaf)
+    return AdamWState(
+        step=NamedSharding(plan.mesh, P()), master=tree, m=tree, v=tree
+    )
+
+
+def adamw_update(
+    cfg: TrainConfig,
+    grads,
+    state: AdamWState,
+    lr: jax.Array,
+) -> Tuple[Any, AdamWState]:
+    """Returns (new bf16-compute params, new state). Applies global-norm
+    clipping and decoupled weight decay."""
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g32)) + 1e-16
+    )
+    clip = jnp.minimum(1.0, cfg.grad_clip / gnorm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.adam_b1**t
+    bc2 = 1.0 - cfg.adam_b2**t
+
+    def upd(g, master, m, v):
+        g = g * clip
+        m = cfg.adam_b1 * m + (1 - cfg.adam_b1) * g
+        v = cfg.adam_b2 * v + (1 - cfg.adam_b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.adam_eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if master.ndim >= 2 else 0.0
+        master = master - lr * (delta + wd * master)
+        return master, m, v
+
+    flat_g, treedef = jax.tree.flatten(g32)
+    flat_ms = jax.tree.leaves(state.master)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(*args) for args in zip(flat_g, flat_ms, flat_m, flat_v)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    new_params = jax.tree.map(
+        lambda ms, p_old: ms.astype(p_old.dtype), new_master, grads
+    )
+    return new_params, AdamWState(step, new_master, new_m, new_v)

@@ -1,0 +1,17 @@
+"""LR schedules. Paper §4.2: cosine annealing 3e-5 -> 3e-7 with 100 warmup
+steps (per-step schedule is microbatch-invariant)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, lr: float, lr_min: float, warmup_steps: int, total_steps: int):
+    """step is the 0-based optimizer step; warmup is 1-indexed so the FIRST
+    update already has lr = lr/warmup (lr=0 at step 0 would silently no-op
+    the first step — found by tests/test_smoke_archs)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = lr * jnp.minimum(step + 1, warmup_steps) / jnp.maximum(warmup_steps, 1)
+    denom = jnp.maximum(total_steps - warmup_steps, 1)
+    frac = jnp.clip((step - warmup_steps) / denom, 0.0, 1.0)
+    cos = lr_min + 0.5 * (lr - lr_min) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,116 @@
+"""Drill-down analysis for the perf loop: per-collective breakdown and the
+top HBM-traffic instructions (with loop multipliers applied), given a
+compiled HLO text. This is the 'profiler' of the dry-run world — §Perf
+hypotheses are formed against its output."""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from repro.roofline.hlo_analysis import (
+    COLLECTIVES,
+    _CALLED_RE,
+    _instr_traffic,
+    _trip_count,
+    _type_bytes,
+    parse_hlo,
+)
+
+
+def loop_multipliers(comps) -> Dict[str, int]:
+    """computation name -> product of enclosing while trip counts."""
+    mult: Dict[str, int] = {}
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {c: 1 for c in comps}
+
+    def walk(cname: str, m: int):
+        comp = comps.get(cname)
+        if comp is None or mult.get(cname, 0) >= m and cname in mult:
+            if cname in mult:
+                return
+        mult[cname] = max(mult.get(cname, 0), m)
+        for ins in comp.instrs.values():
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                trip = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if mb:
+                    walk(mb.group(1), m * trip)
+                if mc:
+                    walk(mc.group(1), m)
+            else:
+                for callee in _CALLED_RE.findall(ins.line):
+                    walk(callee, m)
+
+    walk(entry.name, 1)
+    return mult
+
+
+def _fusion_bodies(comps):
+    import re as _re
+
+    bodies = set()
+    for c in comps.values():
+        for ins in c.instrs.values():
+            if ins.op == "fusion":
+                m = _re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if m:
+                    bodies.add(m.group(1))
+    return bodies
+
+
+def top_traffic(hlo_text: str, n: int = 20) -> List[Tuple[float, int, str, str, str]]:
+    comps = parse_hlo(hlo_text)
+    mult = loop_multipliers(comps)
+    bodies = _fusion_bodies(comps)
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__" or cname in bodies:
+            continue
+        m = mult.get(cname, 1)
+        for ins in comp.instrs.values():
+            t = _instr_traffic(ins, comp.instrs, comps) * m
+            if t > 0:
+                meta = re.search(r'op_name="([^"]*)"', ins.line)
+                rows.append((t, m, ins.op, ins.type_str[:48],
+                             (meta.group(1)[-70:] if meta else cname[:40])))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def collective_detail(hlo_text: str, n: int = 15) -> List[Tuple[float, int, str, str, str]]:
+    comps = parse_hlo(hlo_text)
+    mult = loop_multipliers(comps)
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 1)
+        for ins in comp.instrs.values():
+            op = ins.op.replace("-start", "")
+            if op in COLLECTIVES:
+                nb = _type_bytes(ins.type_str) * (2.0 if op == "all-reduce" else 1.0) * m
+                meta = re.search(r'op_name="([^"]*)"', ins.line)
+                rows.append((nb, m, op, ins.type_str[:48],
+                             (meta.group(1)[-70:] if meta else cname[:40])))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def print_drill(hlo_text: str, n: int = 18) -> None:
+    print("== top HBM traffic (xloop) ==")
+    for t, m, op, ty, src in top_traffic(hlo_text, n):
+        print(f"{t/1e9:9.2f} GB x{m:3d} {op:12s} {ty:48s} {src}")
+    print("== collectives (xloop) ==")
+    for t, m, op, ty, src in collective_detail(hlo_text, n):
+        print(f"{t/1e9:9.3f} GB x{m:3d} {op:18s} {ty:48s} {src}")
+
+
+if __name__ == "__main__":
+    import gzip
+    import sys
+
+    path = sys.argv[1]
+    text = gzip.open(path, "rt").read() if path.endswith(".gz") else open(path).read()
+    print_drill(text)

@@ -1,0 +1,42 @@
+"""Re-score dry-run JSON artifacts from their saved gzipped HLO texts —
+analyzer improvements don't require recompiling 80 combos.
+
+  PYTHONPATH=src python -m repro.roofline.rescore \\
+      [--json experiments/dryrun] [--hlo experiments/hlo]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.roofline.analysis import roofline_from_hlo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="experiments/dryrun")
+    ap.add_argument("--hlo", default="experiments/hlo")
+    args = ap.parse_args()
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(args.json, "*.json"))):
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        tag = os.path.basename(jf)[: -len(".json")]
+        hf = os.path.join(args.hlo, tag + ".hlo.gz")
+        if not os.path.exists(hf):
+            continue
+        hlo = gzip.open(hf, "rt").read()
+        terms, coll = roofline_from_hlo(hlo, rec["chips"])
+        rec["roofline"] = terms.as_dict()
+        rec["collectives"] = coll
+        json.dump(rec, open(jf, "w"), indent=1)
+        n += 1
+    print(f"re-scored {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

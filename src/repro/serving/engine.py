@@ -1,0 +1,121 @@
+"""Batched serving engine: continuous-batching-style request handling on top
+of the fused prefill + single-token decode steps.
+
+Requests arrive with a prompt; the engine packs up to ``max_batch`` active
+requests into one fixed-shape decode batch (static shapes => one compiled
+decode_step). Slots free as requests hit max_new_tokens or EOS and are
+refilled from the queue — a minimal vLLM-style scheduler without paged KV
+(the ring-buffer cache covers the sliding-window configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.model import cache_decl, decode_step, prefill_forward
+from repro.sharding.rules import FoldingPlan, ParamDecl
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        plan: Optional[FoldingPlan] = None,
+        max_batch: int = 4,
+        max_seq: int = 256,
+        greedy: bool = True,
+    ):
+        self.cfg, self.params, self.plan = cfg, params, plan
+        self.max_batch, self.max_seq = max_batch, max_seq
+        self.greedy = greedy
+        W = max_seq if cfg.sliding_window is None else min(max_seq, cfg.sliding_window)
+        self.cache_len = W
+        decls = cache_decl(cfg, max_batch, max_seq)
+        self.cache = jax.tree.map(
+            lambda d: jnp.zeros(d.shape, d.dtype), decls,
+            is_leaf=lambda d: isinstance(d, ParamDecl),
+        )
+        self.cache["slot_pos"] = jnp.full_like(self.cache["slot_pos"], -1)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(cfg, plan, p, c, t)
+        )
+        self._next_tok = jnp.zeros((max_batch,), jnp.int32)
+
+    # -- request management -------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        """Run a single-request prefill and splice its cache into the batch
+        cache at ``slot``."""
+        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        logits, rc = jax.jit(
+            lambda p, b: prefill_forward(self.cfg, self.plan, p, b, cache_len=self.cache_len)
+        )(self.params, batch)
+
+        def splice(dst, src):
+            if dst.ndim >= 3 and dst.shape[1] == self.max_batch:  # stacked (P,B,...)
+                return dst.at[:, slot].set(src[:, 0])
+            return dst.at[slot].set(src[0])
+
+        self.cache["stack"] = jax.tree.map(splice, self.cache["stack"], rc["stack"])
+        self.cache["pos"] = self.cache["pos"].at[slot].set(rc["pos"][0])
+        self.cache["slot_pos"] = self.cache["slot_pos"].at[slot].set(rc["slot_pos"][0])
+        tok = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
+        req.output.append(tok)
+        self._next_tok = self._next_tok.at[slot].set(tok)
+        self.slots[slot] = req
+
+    def _fill_free_slots(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                self._prefill_into_slot(i, self.queue.pop(0))
+
+    # -- main loop ----------------------------------------------------------
+    def step(self) -> int:
+        """One batched decode step across all active slots. Returns the
+        number of active requests."""
+        self._fill_free_slots()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache, self._next_tok)
+        toks = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
+        self._next_tok = toks.astype(jnp.int32)
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.output.append(tok)
+            if len(req.output) >= req.max_new_tokens or (
+                req.eos_id is not None and tok == req.eos_id
+            ):
+                req.done = True
+                self.slots[i] = None
+        return len(active)
+
+    def run(self, requests: List[Request], max_steps: int = 10_000) -> Dict[int, List[int]]:
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (any(self.slots) or self.queue) and steps < max_steps:
+            self.step()
+            steps += 1
+        return {r.rid: r.output for r in requests}

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    FoldingPlan,
+    ParamDecl,
+    init_from_decls,
+    shardings_from_decls,
+    specs_from_decls,
+)

@@ -1,0 +1,187 @@
+"""Training loop: jitted step (loss + grad + clip + AdamW/ZeRO-1 + schedule),
+metrics, MFU accounting, periodic checkpointing.
+
+The same ``make_train_step`` is what the multi-pod dry-run lowers — there is
+no separate "dry-run model"; the production step function is the artifact
+being compiled and analyzed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models.model import loss_fn, model_decl
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, opt_state_shardings
+from repro.optim.schedule import cosine_schedule
+from repro.sharding.rules import (
+    FoldingPlan,
+    init_from_decls,
+    shardings_from_decls,
+)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    plan: Optional[FoldingPlan],
+    use_kernel: bool = False,
+    microbatches: Optional[int] = None,
+):
+    """Returns step(params, opt_state, batch, rng) -> (params, opt_state, metrics).
+
+    With ``microbatches=m > 1`` the global batch is split into m sequential
+    microbatches (lax.scan) whose fp32-accumulated grads feed ONE optimizer
+    update — Megatron-style gradient accumulation, bounding per-microbatch
+    activation memory to 1/m (§Perf M4)."""
+    m = microbatches if microbatches is not None else cfg.train_microbatches
+
+    def grad_of(params, batch, rng):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, plan, p, batch, rng, use_kernel), has_aux=True
+        )(params)
+
+    def step(params, opt_state: AdamWState, batch, rng):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        # clamp to a divisor of the actual batch (smoke tests use tiny B)
+        m_eff = max(1, min(m, B))
+        while B % m_eff:
+            m_eff -= 1
+        if m_eff > 1:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((m_eff, x.shape[0] // m_eff) + x.shape[1:]), batch
+            )
+            keys = jax.random.split(rng, m_eff)
+
+            def body(acc, xs):
+                g_acc, met_acc = acc
+                mb, key = xs
+                (_, met), g = grad_of(params, mb, key)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g
+                )
+                met_acc = jax.tree.map(lambda a, v: a + v, met_acc, met)
+                return (g_acc, met_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            met0 = {
+                k: jnp.zeros((), jnp.float32)
+                for k in ("loss", "ce", "load_balance_loss", "z_loss")
+            }
+            (g_acc, met_acc), _ = jax.lax.scan(body, (g0, met0), (mb_batch, keys))
+            grads = jax.tree.map(lambda g: g / m_eff, g_acc)
+            metrics = jax.tree.map(lambda v: v / m_eff, met_acc)
+        else:
+            (_, metrics), grads = grad_of(params, batch, rng)
+        lr = cosine_schedule(
+            opt_state.step, tcfg.lr, tcfg.lr_min, tcfg.warmup_steps, tcfg.total_steps
+        )
+        new_params, new_opt = adamw_update(tcfg, grads, opt_state, lr)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        metrics = {**metrics, "lr": lr, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return step
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        plan: Optional[FoldingPlan] = None,
+        params: Optional[Any] = None,
+        data_iter: Optional[Iterator[Dict[str, np.ndarray]]] = None,
+        use_kernel: bool = False,
+    ):
+        self.cfg, self.tcfg, self.plan = cfg, tcfg, plan
+        decls = model_decl(cfg)
+        rng = jax.random.PRNGKey(tcfg.seed)
+        if params is not None:
+            # the jitted step donates its inputs; never consume the caller's
+            # buffers (they may be the upcycling source checkpoint)
+            params = jax.tree.map(jnp.array, params)
+        if params is None:
+            if plan is None:
+                params = init_from_decls(decls, rng)
+            else:
+                sh = shardings_from_decls(decls, plan)
+                params = jax.jit(
+                    lambda k: init_from_decls(decls, k), out_shardings=sh
+                )(rng)
+        self.params = params
+        if plan is None:
+            self.opt_state = jax.jit(adamw_init)(params)
+        else:
+            opt_sh = opt_state_shardings(decls, plan, tcfg.zero1)
+            self.opt_state = jax.jit(adamw_init, out_shardings=opt_sh)(params)
+        step = make_train_step(cfg, tcfg, plan, use_kernel)
+        self.step_fn = jax.jit(step, donate_argnums=(0, 1))
+        self.data_iter = data_iter
+        self.rng = jax.random.PRNGKey(tcfg.seed + 1)
+        self.history: list = []
+
+    def run(self, steps: int, log=print) -> Dict[str, list]:
+        assert self.data_iter is not None
+        n_chips = 1 if self.plan is None else self.plan.mesh.devices.size
+        tokens_per_step = self.tcfg.global_batch * self.tcfg.seq_len
+        flops_per_step = 3 * self.cfg.flops_per_token(self.tcfg.seq_len) * tokens_per_step
+        t0 = time.perf_counter()
+        for i in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(self.data_iter).items()}
+            self.rng, sk = jax.random.split(self.rng)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, sk
+            )
+            if (i + 1) % self.tcfg.log_every == 0 or i == 0:
+                metrics = jax.device_get(metrics)
+                dt = (time.perf_counter() - t0) / (i + 1)
+                rec = {
+                    "step": i + 1,
+                    **{k: float(v) for k, v in metrics.items()},
+                    "sec_per_step": dt,
+                    "model_tflops_per_sec": flops_per_step / dt / 1e12 / n_chips,
+                }
+                self.history.append(rec)
+                log(
+                    f"step {rec['step']:5d} loss {rec['loss']:.4f} ce {rec['ce']:.4f} "
+                    f"lr {rec['lr']:.2e} gnorm {rec['grad_norm']:.2f} {dt*1e3:.0f} ms/step"
+                )
+            if self.tcfg.ckpt_every and (i + 1) % self.tcfg.ckpt_every == 0:
+                from repro.checkpoint.ckpt import save_checkpoint
+
+                save_checkpoint(self.tcfg.ckpt_dir, self.params, step=i + 1)
+        return {"history": self.history}
+
+    def eval_loss(self, batches: int = 8, seed: int = 999, data_seed: Optional[int] = None) -> float:
+        """Held-out loss: SAME blend/language (data_seed, default the train
+        seed) but a fresh sampling stream (seed)."""
+        from repro.data.pipeline import make_train_iter
+
+        extra = None
+        if self.cfg.family == "vlm":
+            extra = {
+                "embeds": (self.tcfg.global_batch, self.cfg.num_prefix_embeds, self.cfg.d_model)
+            }
+        if self.cfg.family == "encdec":
+            extra = {"frames": (self.tcfg.global_batch, self.tcfg.seq_len, self.cfg.d_model)}
+        it = make_train_iter(
+            self.cfg.vocab_size, self.tcfg.seq_len, self.tcfg.global_batch,
+            self.tcfg.blend_ratio,
+            data_seed if data_seed is not None else self.tcfg.seed,
+            extra, sample_seed=seed,
+        )
+        fn = jax.jit(lambda p, b: loss_fn(self.cfg, self.plan, p, b)[1]["ce"])
+        losses = []
+        for _ in range(batches):
+            b = {k: jnp.asarray(v) for k, v in next(it).items()}
+            losses.append(float(fn(self.params, b)))
+        return float(np.mean(losses))

@@ -1,0 +1,54 @@
+import os
+
+# Tests run on the single real CPU device. Only the dry-run sets the
+# 512-placeholder flag; distributed tests spawn subprocesses with their own
+# XLA_FLAGS (see test_distributed.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_dense(**kw):
+    from repro.config import ModelConfig
+
+    base = dict(
+        name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=256, vocab_divisor=64,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def init_model(cfg, seed=0, fp32=False):
+    from repro.models.model import model_decl
+    from repro.sharding.rules import init_from_decls
+
+    params = init_from_decls(model_decl(cfg), jax.random.PRNGKey(seed))
+    if fp32:
+        params = jax.tree.map(
+            lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x, params
+        )
+    return params
+
+
+def make_batch(cfg, B, S, rng, labels=True, enc_len=8):
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if labels:
+        b["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.family == "vlm":
+        b["embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_prefix_embeds, cfg.d_model)), jnp.float32
+        ) * 0.02
+    if cfg.family == "encdec":
+        b["frames"] = jnp.asarray(
+            rng.standard_normal((B, enc_len, cfg.d_model)), jnp.float32
+        ) * 0.02
+    return b

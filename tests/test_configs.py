@@ -1,0 +1,76 @@
+"""Config system: all assigned architectures load, counts match the
+published models, smoke reductions stay in the same family."""
+import pytest
+
+from repro.config import ARCH_IDS, SHAPES, get_config, smoke_config
+
+# published (total, active) in billions; tolerance is loose because we count
+# exactly what we implement (biases, norms, routers included).
+PUBLISHED = {
+    "mamba2-2.7b": (2.7, 2.7),
+    "minicpm3-4b": (4.0, 4.0),
+    "llama3.2-3b": (3.2, 3.2),
+    "stablelm-1.6b": (1.6, 1.6),
+    "jamba-1.5-large-398b": (398.0, 94.0),
+    "qwen3-moe-30b-a3b": (30.5, 3.3),
+    "llava-next-34b": (34.4, 34.4),
+    "qwen2.5-14b": (14.7, 14.7),
+    "arctic-480b": (480.0, 17.0),
+    "llama3-8b": (8.0, 8.0),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    t, a = cfg.param_counts()
+    assert t >= a > 0
+    assert cfg.padded_vocab % cfg.vocab_divisor == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED))
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    t, a = cfg.param_counts()
+    pt, pa = PUBLISHED[arch]
+    assert abs(t / 1e9 - pt) / pt < 0.20, (arch, t / 1e9, pt)
+    assert abs(a / 1e9 - pa) / pa < 0.20, (arch, a / 1e9, pa)
+
+
+def test_e8t2_flops_ratio_table1():
+    """Paper Table 1: E8T2 uses ~1.6x the dense FLOPs despite ~4-6x params."""
+    dense = get_config("llama3-8b")
+    moe = get_config("llama3-e8t2")
+    r_flops = moe.flops_per_token(8192) / dense.flops_per_token(8192)
+    r_params = moe.param_counts()[0] / dense.param_counts()[0]
+    assert 1.4 < r_flops < 1.9, r_flops
+    assert 4.0 < r_params < 6.5, r_params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_reduced(arch):
+    cfg = smoke_config(get_config(arch))
+    assert cfg.family == get_config(arch).family
+    assert cfg.d_model <= 512
+    assert cfg.num_layers <= 8
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    t, _ = cfg.param_counts()
+    assert t < 50e6
+
+
+def test_shapes_registry():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["train_4k"].global_batch == 256
+
+
+def test_long_context_policy():
+    assert get_config("mamba2-2.7b").supports_long_context
+    assert get_config("jamba-1.5-large-398b").supports_long_context
+    assert get_config("minicpm3-4b").supports_long_context  # MLA latent cache
+    assert not get_config("seamless-m4t-medium").supports_long_context
+    assert not get_config("llama3.2-3b").supports_long_context  # until SWA variant
+    assert get_config("llama3.2-3b").replace(sliding_window=8192).supports_long_context

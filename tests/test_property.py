@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import MoEConfig
+from repro.core.moe import _dispatch_tables, capacity
+from repro.models.attention import _mask
+from repro.models.layers import rope_apply
+from repro.roofline.analysis import _shape_bytes
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    T=st.integers(1, 64),
+    E=st.integers(1, 16),
+    k=st.integers(1, 4),
+    cf=st.one_of(st.none(), st.floats(0.1, 8.0)),
+)
+def test_capacity_invariants(T, E, k, cf):
+    k = min(k, E)
+    moe = MoEConfig(num_experts=E, top_k=k, capacity_factor=cf)
+    C = capacity(moe, T)
+    assert 1 <= C <= T  # an expert never needs more than T slots
+    if cf is None:
+        assert C == T  # dropless worst case
+    else:
+        assert C >= min(int(np.floor(k * T / E * cf)), T) or C == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    T=st.integers(1, 32),
+    E=st.integers(2, 8),
+    k=st.integers(1, 3),
+    seed=st.integers(0, 100),
+)
+def test_dispatch_conservation(T, E, k, seed):
+    """Every slot_gate entry comes from exactly one kept assignment; total
+    combine weight == sum of kept gates; per-expert load <= capacity."""
+    k = min(k, E)
+    rng = np.random.default_rng(seed)
+    idx_np = np.stack([rng.choice(E, size=k, replace=False) for _ in range(T)])
+    gates_np = rng.uniform(0.1, 1.0, (T, k)).astype(np.float32)
+    moe = MoEConfig(num_experts=E, top_k=k, capacity_factor=1.5)
+    C = capacity(moe, T)
+    sel, slot_gate = _dispatch_tables(
+        jnp.asarray(idx_np, jnp.int32), jnp.asarray(gates_np), E, C
+    )
+    sel, slot_gate = np.asarray(sel), np.asarray(slot_gate)
+    # per-expert kept count never exceeds capacity
+    kept = (slot_gate > 0).sum(axis=1)
+    assert (kept <= C).all()
+    # total routed weight <= total gate weight; equality iff nothing dropped
+    assert slot_gate.sum() <= gates_np.sum() + 1e-4
+    # each kept slot's gate matches the original assignment's gate
+    for e in range(E):
+        for c in range(C):
+            if slot_gate[e, c] > 0:
+                t = sel[e, c]
+                assert any(
+                    idx_np[t, j] == e and abs(gates_np[t, j] - slot_gate[e, c]) < 1e-6
+                    for j in range(k)
+                )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    S=st.integers(2, 40),
+    window=st.one_of(st.none(), st.integers(1, 16)),
+)
+def test_mask_properties(S, window):
+    pos = jnp.arange(S)[None]
+    m = np.asarray(_mask(pos, pos, window))
+    assert m[0].diagonal().all()  # self always visible
+    assert not np.triu(m[0], 1).any()  # causal
+    if window is not None:
+        i, j = np.tril_indices(S)
+        visible = m[0][i, j]
+        assert ((i - j < window) == visible).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    S=st.integers(1, 16),
+    H=st.integers(1, 4),
+    d_half=st.sampled_from([2, 4, 8, 16]),
+    shift=st.integers(0, 100),
+)
+def test_rope_norm_and_relativity(S, H, d_half, shift):
+    """RoPE preserves norms, and q.k depends only on relative positions."""
+    d = 2 * d_half
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, S, H, d)), jnp.float32)
+    pos = jnp.arange(S)[None]
+    y = rope_apply(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        atol=1e-4,
+    )
+    q = jnp.asarray(rng.standard_normal((1, S, H, d)), jnp.float32)
+    dot1 = np.einsum("bshd,bthd->bhst", np.asarray(rope_apply(q, pos, 1e4)), np.asarray(y))
+    y2 = rope_apply(x, pos + shift, 10000.0)
+    q2 = rope_apply(q, pos + shift, 10000.0)
+    dot2 = np.einsum("bshd,bthd->bhst", np.asarray(q2), np.asarray(y2))
+    np.testing.assert_allclose(dot1, dot2, atol=2e-3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+    dt=st.sampled_from(["f32", "bf16", "s32", "u8"]),
+)
+def test_hlo_shape_bytes(dims, dt):
+    sizes = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1}
+    type_str = f"{dt}[{','.join(map(str, dims))}]"
+    expect = sizes[dt] * int(np.prod(dims)) if dims else sizes[dt]
+    assert _shape_bytes(type_str) == expect

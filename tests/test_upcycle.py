@@ -1,0 +1,100 @@
+"""Sparse upcycling (paper §3.1, §5.2): exactness, subsets, checkpoints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import init_model, make_batch, tiny_dense
+from repro.config import MoEConfig
+from repro.core.upcycle import upcycle_config, upcycle_params
+from repro.models.model import forward, model_decl
+
+
+def _dense(fp32=True):
+    cfg = tiny_dense(num_layers=4, dtype="float32")
+    return cfg, init_model(cfg, fp32=True)
+
+
+def test_mixtral_upcycle_preserves_dense_function(rng):
+    """THE paper claim (Fig. 3): with the Mixtral-type router, the upcycled
+    MoE's first forward pass equals the dense model."""
+    cfg, dp = _dense()
+    moe_c = upcycle_config(cfg, MoEConfig(num_experts=4, top_k=2,
+                                          capacity_factor=None, router_type="mixtral"))
+    mp = upcycle_params(cfg, moe_c, dp, jax.random.PRNGKey(1))
+    batch = make_batch(cfg, 2, 16, rng, labels=False)
+    ld, _ = forward(cfg, None, dp, batch)
+    lm, _ = forward(moe_c, None, mp, batch)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lm), atol=1e-4)
+
+
+def test_st_upcycle_does_not_preserve(rng):
+    cfg, dp = _dense()
+    moe_c = upcycle_config(cfg, MoEConfig(num_experts=4, top_k=2,
+                                          capacity_factor=None, router_type="st"))
+    mp = upcycle_params(cfg, moe_c, dp, jax.random.PRNGKey(1))
+    batch = make_batch(cfg, 2, 16, rng, labels=False)
+    ld, _ = forward(cfg, None, dp, batch)
+    lm, _ = forward(moe_c, None, mp, batch)
+    assert float(jnp.max(jnp.abs(ld - lm))) > 1e-2
+
+
+def test_experts_are_exact_copies():
+    cfg, dp = _dense()
+    moe_c = upcycle_config(cfg, MoEConfig(num_experts=4, top_k=2))
+    mp = upcycle_params(cfg, moe_c, dp, jax.random.PRNGKey(1))
+    wg = np.asarray(mp["stack"]["slot0"]["ffn"]["experts"]["w_gate"])
+    dense_wg = np.asarray(dp["stack"]["slot0"]["ffn"]["w_gate"])
+    for e in range(4):
+        np.testing.assert_array_equal(wg[:, e], dense_wg)
+
+
+def test_non_ffn_weights_copied_verbatim():
+    cfg, dp = _dense()
+    moe_c = upcycle_config(cfg, MoEConfig(num_experts=4, top_k=2))
+    mp = upcycle_params(cfg, moe_c, dp, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(
+        np.asarray(mp["embed"]["embedding"]), np.asarray(dp["embed"]["embedding"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(mp["stack"]["slot0"]["mixer"]["wq"]),
+        np.asarray(dp["stack"]["slot0"]["mixer"]["wq"]),
+    )
+
+
+def test_subset_upcycle_moe_layer_freq(rng):
+    """Paper §3.1: 'convert a subset of the feed-forward layers'."""
+    cfg, dp = _dense()
+    moe_c = upcycle_config(cfg, MoEConfig(num_experts=4, top_k=2,
+                                          capacity_factor=None, moe_layer_freq=2))
+    mp = upcycle_params(cfg, moe_c, dp, jax.random.PRNGKey(1))
+    assert set(mp["stack"]) == {"slot0", "slot1"}
+    assert "router" in mp["stack"]["slot1"]["ffn"]  # every 2nd layer is MoE
+    assert "w_gate" in mp["stack"]["slot0"]["ffn"]  # odd layers stay dense
+    batch = make_batch(cfg, 2, 16, rng, labels=False)
+    ld, _ = forward(cfg, None, dp, batch)
+    lm, _ = forward(moe_c, None, mp, batch)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lm), atol=1e-4)
+
+
+def test_upcycle_refuses_ffn_free_arch():
+    from repro.config import get_config
+
+    with pytest.raises(AssertionError):
+        upcycle_config(get_config("mamba2-2.7b"), MoEConfig())
+
+
+def test_checkpoint_roundtrip_and_upcycle_on_load(tmp_path, rng):
+    from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint, upcycle_on_load
+
+    cfg = tiny_dense(num_layers=2)
+    dp = init_model(cfg)
+    save_checkpoint(str(tmp_path / "ckpt"), dp, step=7)
+    loaded = load_checkpoint(str(tmp_path / "ckpt"))
+    for a, b in zip(jax.tree.leaves(dp), jax.tree.leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    moe_c = upcycle_config(cfg, MoEConfig(num_experts=4, top_k=2))
+    mp, _ = upcycle_on_load(str(tmp_path / "ckpt"), cfg, moe_c, None, jax.random.PRNGKey(0))
+    assert mp["stack"]["slot0"]["ffn"]["experts"]["w_gate"].shape[1] == 4
