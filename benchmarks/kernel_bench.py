@@ -1,16 +1,53 @@
 """Kernel microbench: Pallas expert_gemm / flash_attention vs their XLA
-reference paths. On this CPU container the Pallas kernels run in interpret
-mode (Python), so wall-times are NOT hardware-representative; we therefore
-report (a) XLA-path wall time as the throughput baseline, (b) kernel-vs-ref
-max error, and (c) derived HBM-traffic savings of the fused SwiGLU epilogue
-(the quantity the kernel exists to optimize on TPU)."""
+reference paths, plus the padded-vs-sorted dropless dispatcher comparison.
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+wall-times are NOT hardware-representative; we therefore report (a) XLA-path
+wall time as the throughput baseline, (b) kernel-vs-ref max error, and (c)
+derived HBM-traffic savings of the fused SwiGLU epilogue (the quantity the
+kernel exists to optimize on TPU)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.kernels.ops import expert_gemm, flash_attention
+from repro.kernels.ops import expert_gemm, flash_attention, grouped_gemm_xla
 from repro.kernels.ref import expert_gemm_ref, flash_attention_ref
+
+
+def dispatcher_comparison(rng, rows):
+    """Dropless expert-FFN cost, padded (E, C=T, D) layout vs. the sorted
+    dispatcher's flat (T*k, D) layout, at the llama3-e8t2 routing shape
+    (E=8, top_k=2; D/F reduced so the XLA baseline runs on CPU)."""
+    E, k, T, D, F = 8, 2, 1024, 256, 512
+    C = T  # padded dropless worst case: one expert could take every token
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), jnp.bfloat16) * 0.05
+
+    xe = jnp.asarray(rng.standard_normal((E, C, D)), jnp.bfloat16) * 0.3
+    us_pad = timed(jax.jit(expert_gemm_ref), xe, wg, wu, wd) * 1e6
+
+    # balanced routing, as the load-balance loss drives it
+    gs = jnp.full((E,), T * k // E, jnp.int32)
+    xs = jnp.asarray(rng.standard_normal((T * k, D)), jnp.bfloat16) * 0.3
+    us_sort = timed(jax.jit(grouped_gemm_xla), xs, wg, wu, wd, gs) * 1e6
+
+    act_bytes = lambda rows_: rows_ * (D + F + D) * 2  # x in, h, y out (bf16)
+    rows.append({
+        "name": f"dispatch e8t2 padded-dropless E{E} C{C} D{D} F{F}",
+        "us_per_call_xla_ref": round(us_pad, 1),
+        "kernel_max_err": 0.0,
+        "derived": f"{E*C} gemm rows, {act_bytes(E*C)/1e6:.1f}MB activations",
+    })
+    rows.append({
+        "name": f"dispatch e8t2 sorted-dropless N{T*k} D{D} F{F}",
+        "us_per_call_xla_ref": round(us_sort, 1),
+        "kernel_max_err": 0.0,
+        "derived": (
+            f"{T*k} gemm rows, {act_bytes(T*k)/1e6:.1f}MB activations "
+            f"({E*C/(T*k):.0f}x fewer rows than padded)"
+        ),
+    })
 
 
 def main():
@@ -32,6 +69,7 @@ def main():
             "kernel_max_err": round(err, 5),
             "derived": f"fused epilogue saves {saved/1e6:.1f}MB HBM traffic/layer",
         })
+    dispatcher_comparison(rng, rows)
     for (B, S, H, KV, d) in [(2, 1024, 8, 2, 128), (1, 2048, 4, 4, 64)]:
         q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.bfloat16) * 0.3
         k = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.bfloat16) * 0.3

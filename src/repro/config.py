@@ -21,15 +21,23 @@ from typing import Optional, Tuple
 class MoEConfig:
     """Mixture-of-Experts recipe (paper §2, §3).
 
-    ``capacity_factor=None`` means token-dropless training (infinite CF): the
-    per-expert capacity becomes the worst case (all tokens to one expert).
+    ``capacity_factor=None`` means token-dropless training (infinite CF).
+    Under the padded dispatchers the per-expert capacity then becomes the
+    worst case (all tokens to one expert); prefer ``dispatcher="sorted"``
+    for dropless runs — it is exactly dropless with no padding blow-up.
     ``router_type``:
       * ``mixtral`` — KeepTopK then Softmax over the k survivors (paper §5.2;
         preserves the dense function at upcycling init).
       * ``st``      — Softmax over all N experts then KeepTopK (keeps absolute
         router magnitudes; does NOT preserve the dense function for 1<k<N).
-    ``dispatcher``: ``allgather`` or ``alltoall`` (Megatron-Core's two token
-    dispatchers, §3.2 practice #2).
+    ``dispatcher`` (token dispatch subsystem, ``repro.core.dispatch``):
+      * ``allgather`` — global-view pjit, padded (E, C, D) layout with
+        CF-bounded token dropping (Megatron-Core dispatcher #1, §3.2).
+      * ``alltoall``  — shard_map + lax.all_to_all over the EP axis
+        (dispatcher #2; preferred for small top-k, per the paper).
+      * ``sorted``    — argsort token permutation into a flat (T*k, D)
+        expert-sorted buffer + per-expert group sizes (MegaBlocks-style);
+        true dropless. Recommended with ``capacity_factor=None``.
     """
 
     num_experts: int = 8
@@ -39,11 +47,16 @@ class MoEConfig:
     noisy_gating: bool = False  # Eq. (3) noisy top-k; off in paper main runs
     aux_loss_coef: float = 1e-2  # Switch-style load balance loss
     z_loss_coef: float = 1e-3  # router z-loss
-    dispatcher: str = "allgather"  # allgather | alltoall
+    dispatcher: str = "allgather"  # allgather | alltoall | sorted
     expert_d_ff: int = 0  # per-expert FFN hidden size (0 -> use model d_ff)
     moe_layer_freq: int = 1  # MoE every k-th layer (jamba: 2)
     dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
     router_dtype: str = "float32"
+
+    DISPATCHERS = ("allgather", "alltoall", "sorted")
+
+    def __post_init__(self):
+        assert self.dispatcher in self.DISPATCHERS, self.dispatcher
 
     def experts_ff(self, d_ff: int) -> int:
         return self.expert_d_ff or d_ff
@@ -359,6 +372,16 @@ def smoke_config(cfg: ModelConfig) -> ModelConfig:
     if cfg.sliding_window:
         kw.update(sliding_window=32)
     return cfg.replace(name=cfg.name, **kw)
+
+
+def with_dispatcher(cfg: ModelConfig, dispatcher: Optional[str]) -> ModelConfig:
+    """Return ``cfg`` with its MoE token dispatcher overridden (no-op for
+    dense configs or ``dispatcher=None``) — the launcher/Trainer/Engine hook
+    for threading a ``--dispatcher`` choice without hand-editing the nested
+    frozen config."""
+    if dispatcher is None or cfg.moe is None:
+        return cfg
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, dispatcher=dispatcher))
 
 
 def get_config(arch: str) -> ModelConfig:

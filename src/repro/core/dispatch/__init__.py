@@ -1,0 +1,106 @@
+"""TokenDispatcher subsystem: moves routed tokens between the token-major
+model layout and the expert-major kernel layouts.
+
+Three dispatchers (select via ``MoEConfig.dispatcher``):
+
+* ``allgather`` — global-view pjit; dense padded (E, C, D) layout,
+  CF-bounded token dropping. Default; works on any mesh.
+* ``alltoall``  — shard_map + lax.all_to_all over the EP axis (preferred
+  for small top-k per paper §3.2); padded layout, needs an EP plan.
+* ``sorted``    — argsort token permutation into a flat (T*k, D)
+  expert-sorted buffer + per-expert group_sizes; true dropless with no
+  C = T padding blow-up. Recommended for ``capacity_factor=None`` runs.
+
+``get_dispatcher`` applies the legality fallbacks (expert-choice routing
+needs the full-probability tables -> allgather; alltoall needs an EP plan
+and divisible token shards).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.dispatch.allgather import AllGatherDispatcher
+from repro.core.dispatch.alltoall import AllToAllDispatcher
+from repro.core.dispatch.base import (
+    DispatchLayout,
+    TokenDispatcher,
+    capacity,
+    dispatch_tables,
+    expert_choice_tables,
+    expert_ffn,
+    num_groups,
+)
+from repro.core.dispatch.sorted import SortedDispatcher
+from repro.sharding.rules import FoldingPlan
+
+DISPATCHERS = {
+    "allgather": AllGatherDispatcher,
+    "alltoall": AllToAllDispatcher,
+    "sorted": SortedDispatcher,
+}
+
+
+def get_dispatcher(
+    cfg: Any,
+    moe: Any,
+    plan: Optional[FoldingPlan],
+    total_tokens: int,
+    batch: int,
+) -> TokenDispatcher:
+    """Resolve ``moe.dispatcher`` to a legal dispatcher instance for this
+    (plan, shape), falling back to allgather when preconditions fail."""
+    name = moe.dispatcher
+    if name not in DISPATCHERS:
+        raise ValueError(
+            f"unknown dispatcher {name!r}; expected one of {sorted(DISPATCHERS)}"
+        )
+    if name == "sorted" and moe.router_type == "expert_choice":
+        # EC routing emits per-expert (token, gate) tables directly; the
+        # flat top-k assignment list the sort permutes does not exist
+        name = "allgather"
+    if name == "sorted" and moe.capacity_factor is not None:
+        warnings.warn(
+            "dispatcher='sorted' is always dropless: capacity_factor="
+            f"{moe.capacity_factor} is ignored (no CF-bounded token "
+            "dropping). Use a padded dispatcher for CF semantics.",
+            stacklevel=2,
+        )
+    if name == "alltoall":
+        ok = (
+            moe.router_type != "expert_choice"  # EC gates are (T, E)
+            and plan is not None
+            and plan.moe_mode == "ep"
+            and total_tokens
+            % int(
+                np.prod(
+                    [plan.mesh.shape[a] for a in tuple(plan.batch_axes) + (plan.ep_axis,)]
+                )
+            )
+            == 0
+        )
+        if not ok:
+            name = "allgather"
+    if name == "allgather":
+        return AllGatherDispatcher(
+            cfg, moe, plan, groups=num_groups(plan, total_tokens, batch)
+        )
+    return DISPATCHERS[name](cfg, moe, plan)
+
+
+__all__ = [
+    "DISPATCHERS",
+    "DispatchLayout",
+    "TokenDispatcher",
+    "AllGatherDispatcher",
+    "AllToAllDispatcher",
+    "SortedDispatcher",
+    "capacity",
+    "dispatch_tables",
+    "expert_choice_tables",
+    "expert_ffn",
+    "num_groups",
+    "get_dispatcher",
+]

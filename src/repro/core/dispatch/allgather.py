@@ -1,0 +1,79 @@
+"""AllGather token dispatcher (global-view pjit formulation).
+
+Tokens stay replicated over the EP axis; each expert shard gathers the
+(<= capacity) tokens routed to its local experts, and the combine is a
+scatter-add whose cross-shard reduction XLA lowers to an
+all-reduce/reduce-scatter over the EP axis. Dense padded ``(G, E, C, D)``
+layout; overflow past capacity is dropped (CF-bounded) — with
+``capacity_factor=None`` the padded layout blows up to ``C = T`` per group
+(use the sorted dispatcher for efficient dropless runs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch.base import (
+    DispatchLayout,
+    TokenDispatcher,
+    capacity,
+    dispatch_tables,
+    expert_choice_tables,
+)
+from repro.sharding.rules import FoldingPlan
+
+
+class AllGatherDispatcher(TokenDispatcher):
+    name = "allgather"
+
+    def __init__(self, cfg, moe, plan: Optional[FoldingPlan], groups: int = 1):
+        super().__init__(cfg, moe, plan)
+        self.groups = groups
+
+    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array) -> jax.Array:
+        T, D = x.shape
+        moe, plan = self.moe, self.plan
+        E, k = moe.num_experts, moe.top_k
+        G = self.groups
+        Tg = T // G
+        C = capacity(moe, Tg)
+        self._T, self._Tg, self._C, self._E = T, Tg, C, E
+
+        xg = x.reshape(G, Tg, D)
+        if moe.router_type == "expert_choice":
+            # gates here carries the full (T, E) probability matrix
+            sel, slot_gate = jax.vmap(lambda p: expert_choice_tables(p, E, C))(
+                gates.reshape(G, Tg, E)
+            )
+        else:
+            sel, slot_gate = jax.vmap(lambda i, g: dispatch_tables(i, g, E, C))(
+                idx.reshape(G, Tg, k), gates.reshape(G, Tg, k)
+            )
+        if plan is not None:
+            xg = plan.constrain(xg, "batch", None, None)
+            sel = plan.constrain(sel, "batch", None, None)
+
+        # dispatch: local gather (tokens replicated over EP axis within a group)
+        xe = jax.vmap(lambda xs, s: xs[s])(xg, sel)  # (G, E, C, D)
+        if plan is not None:
+            xe = plan.constrain(xe, "batch", "expert", None, None)
+        self._sel, self._slot_gate = sel, slot_gate
+        self.layout = DispatchLayout("padded", E, capacity=C)
+        return xe
+
+    def combine(self, ye: jax.Array) -> jax.Array:
+        # scatter-add back to token order; contributions from different
+        # expert shards reduce over the EP axis.
+        E, C, Tg, D = self._E, self._C, self._Tg, ye.shape[-1]
+        ye = ye * self._slot_gate[..., None].astype(ye.dtype)
+
+        def scatter(y_g, sel_g):
+            flat = y_g.reshape(E * C, D)
+            return jnp.zeros((Tg, D), flat.dtype).at[sel_g.reshape(E * C)].add(flat)
+
+        out = jax.vmap(scatter)(ye, self._sel)  # (G, Tg, D)
+        if self.plan is not None:
+            out = self.plan.constrain(out, "batch", None, None)
+        return out.reshape(self._T, D)

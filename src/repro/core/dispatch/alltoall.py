@@ -1,0 +1,94 @@
+"""AllToAll token dispatcher (shard_map + ``lax.all_to_all`` over the EP
+axis; preferred for small top-k, per the paper §3.2 practice #2).
+
+Each token shard builds its local dispatch tables, sends capacity-sized
+slot blocks to the shards owning the target experts, and the combine
+reverses the exchange. Requires an EP plan (``plan.moe_mode == "ep"``) and
+a token count divisible by the token-shard product; `get_dispatcher` falls
+back to allgather otherwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dispatch.base import (
+    DispatchLayout,
+    TokenDispatcher,
+    capacity,
+    dispatch_tables,
+    expert_ffn,
+)
+
+
+class AllToAllDispatcher(TokenDispatcher):
+    name = "alltoall"
+
+    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array) -> jax.Array:
+        """Local shard view: table build + all_to_all. Called inside the
+        shard_map region set up by ``apply``."""
+        moe = self.moe
+        E, C, ep, E_loc = self._E, self._C, self._ep, self._E_loc
+        T_loc, D = x.shape
+        sel, slot_gate = dispatch_tables(idx, gates, E, C)  # (E, C)
+        send = x[sel]  # (E, C, D) outgoing slots, grouped by global expert
+        recv = jax.lax.all_to_all(
+            send.reshape(ep, E_loc, C, D), self._ep_axis, split_axis=0, concat_axis=0
+        )  # (ep, E_loc, C, D): slot block from every sender for my experts
+        xe = recv.transpose(1, 0, 2, 3).reshape(E_loc, ep * C, D)
+        self._sel, self._slot_gate, self._T_loc = sel, slot_gate, T_loc
+        self.layout = DispatchLayout("padded", E_loc, capacity=ep * C)
+        return xe
+
+    def combine(self, ye: jax.Array) -> jax.Array:
+        E, C, ep, E_loc = self._E, self._C, self._ep, self._E_loc
+        D = ye.shape[-1]
+        back = ye.reshape(E_loc, ep, C, D).transpose(1, 0, 2, 3)
+        ret = jax.lax.all_to_all(back, self._ep_axis, split_axis=0, concat_axis=0)
+        ret = ret.reshape(E, C, D) * self._slot_gate[..., None].astype(ye.dtype)
+        return jnp.zeros((self._T_loc, D), ret.dtype).at[
+            self._sel.reshape(E * C)
+        ].add(ret.reshape(E * C, D))
+
+    def apply(
+        self,
+        experts,
+        x: jax.Array,
+        gates: jax.Array,
+        idx: jax.Array,
+        use_kernel: bool = False,
+    ) -> jax.Array:
+        plan, moe = self.plan, self.moe
+        mesh = plan.mesh
+        ep_axis = plan.ep_axis
+        assert ep_axis is not None and plan.moe_mode == "ep"
+        ep = mesh.shape[ep_axis]
+        T = x.shape[0]
+        E = moe.num_experts
+        token_axes = tuple(plan.batch_axes) + (ep_axis,)
+        shards = int(np.prod([mesh.shape[a] for a in token_axes]))
+        assert T % shards == 0, (T, shards)
+        self._ep_axis, self._ep = ep_axis, ep
+        self._E, self._E_loc = E, E // ep
+        self._C = capacity(moe, T // shards)
+
+        w_specs = jax.tree.map(lambda _: P(ep_axis, None, None), experts)
+
+        def local_moe(x_l, gates_l, idx_l, experts_l):
+            xe = self.dispatch(x_l, idx_l, gates_l)
+            ye = expert_ffn(experts_l, xe[None], self.layout, use_kernel)[0]
+            return self.combine(ye)
+
+        fn = shard_map(
+            local_moe,
+            mesh=mesh,
+            in_specs=(
+                P(token_axes, None), P(token_axes, None), P(token_axes, None), w_specs,
+            ),
+            out_specs=P(token_axes, None),
+            check_rep=False,
+        )
+        return fn(x, gates, idx, experts)

@@ -1,0 +1,96 @@
+"""Sorted dropless dispatcher (MegaBlocks/Megatron-style argsort permutation).
+
+Instead of the dense padded ``(E, C, D)`` layout — which for dropless runs
+degenerates to the worst case ``C = T`` — the token assignments are argsorted
+by expert id into one flat ``(T*k, D)`` expert-sorted buffer plus per-expert
+``group_sizes``. True dropless: every assignment is computed, no capacity,
+no ``O(T*k*E)`` one-hot/cumsum table build (the permutation is an
+``O(N log N)`` argsort + gather), and compute/memory scale with ``T*k``
+instead of ``E*C``.
+
+Layout notes for the kernel path: the Pallas grouped GEMM tiles rows, so
+each expert's region is aligned up to the row-tile size (``row_block``) and
+rows past ``group_sizes[e]`` in the last tile are masked. The XLA path
+(``lax.ragged_dot``) consumes the compact buffer (``row_block=1``).
+
+This dispatcher operates in the global pjit view (like allgather); under an
+EP mesh XLA inserts the gather/reduce collectives. A shard_map variant with
+explicit a2a of the sorted buffer is future work.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch.base import DispatchLayout, TokenDispatcher, expert_ffn
+
+# Row-tile alignment of the expert-sorted buffer on the kernel path. This is
+# the single knob: it is threaded to the grouped GEMM as its row-tile size
+# via layout.row_block -> ops.grouped_gemm(row_block=...), so buffer
+# alignment and kernel tiling cannot drift apart. 128 = MXU-aligned.
+KERNEL_ROW_BLOCK = 128
+
+
+def aligned_rows(N: int, E: int, row_block: int) -> int:
+    """Static worst-case buffer rows: sum_e ceil(g_e/b)*b <= N + E*(b-1),
+    rounded up to a whole number of row tiles."""
+    if row_block <= 1:
+        return N
+    return -(-(N + E * (row_block - 1)) // row_block) * row_block
+
+
+class SortedDispatcher(TokenDispatcher):
+    name = "sorted"
+
+    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array) -> jax.Array:
+        T, D = x.shape
+        E = self.moe.num_experts
+        k = idx.shape[-1]
+        N = T * k
+        b = self._row_block
+
+        flat_e = idx.reshape(N)
+        # stable argsort: expert-major, token-major within an expert (same
+        # priority order as the table-based dispatchers)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        token = order // k  # token providing each sorted row
+        group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+
+        # destination row of each sorted assignment in the (tile-aligned)
+        # buffer: expert region start + position within the expert
+        padded = ((group_sizes + b - 1) // b) * b
+        starts_pad = jnp.cumsum(padded) - padded
+        starts = jnp.cumsum(group_sizes) - group_sizes
+        pos_in_group = jnp.arange(N, dtype=jnp.int32) - starts[sorted_e]
+        dest = (starts_pad[sorted_e] + pos_in_group).astype(jnp.int32)
+
+        N_pad = aligned_rows(N, E, b)
+        xs = jnp.zeros((N_pad, D), x.dtype).at[dest].set(x[token])
+        self._token, self._dest, self._T = token, dest, T
+        self._gate_sorted = gates.reshape(N)[order]
+        self.layout = DispatchLayout(
+            "sorted", E, group_sizes=group_sizes, row_block=b
+        )
+        return xs
+
+    def combine(self, ye: jax.Array) -> jax.Array:
+        D = ye.shape[-1]
+        yv = ye[self._dest]  # (N, D) valid rows back in sorted order
+        yv = yv * self._gate_sorted[:, None].astype(ye.dtype)
+        return jnp.zeros((self._T, D), yv.dtype).at[self._token].add(yv)
+
+    def apply(
+        self,
+        experts,
+        x: jax.Array,
+        gates: jax.Array,
+        idx: jax.Array,
+        use_kernel: bool = False,
+    ) -> jax.Array:
+        # the kernel tiles rows -> tile-aligned regions; XLA ragged_dot
+        # consumes the compact buffer
+        self._row_block = KERNEL_ROW_BLOCK if use_kernel else 1
+        xe = self.dispatch(x, idx, gates)
+        ye = expert_ffn(experts, xe, self.layout, use_kernel)
+        return self.combine(ye)

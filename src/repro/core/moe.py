@@ -1,16 +1,23 @@
-"""Mixture-of-Experts layer with capacity-factor token dropping and the two
-Megatron-Core token dispatchers (paper §3.2 tuning practice #2):
+"""Mixture-of-Experts layer: router + TokenDispatcher orchestration.
 
-* ``allgather`` — global-view pjit formulation: tokens stay replicated over
-  the EP axis, each expert shard gathers the (<= capacity) tokens routed to
-  its local experts, and the combine is a scatter-add whose cross-shard
-  reduction XLA lowers to an all-reduce/reduce-scatter over the EP axis.
+All dispatch/combine logic lives in the ``repro.core.dispatch`` subsystem;
+this module routes tokens, picks the dispatcher, and applies the dense
+residual. Three dispatchers (paper §3.2 tuning practice #2 + dropless):
+
+* ``allgather`` — global-view pjit: tokens stay replicated over the EP
+  axis, each expert shard gathers the (<= capacity) tokens routed to its
+  local experts, combine is a scatter-add reduced over the EP axis.
 * ``alltoall``  — shard_map formulation with explicit ``jax.lax.all_to_all``
   over the EP axis (preferred for small top-k, per the paper).
+* ``sorted``    — MegaBlocks-style argsort token permutation into a flat
+  (T*k, D) expert-sorted buffer + per-expert group_sizes; true dropless
+  with no padded-capacity blow-up. Recommended with
+  ``capacity_factor=None``.
 
-Capacity (paper §2): ``C = ceil(k * tokens_per_group / E * CF)``; overflowing
-tokens are dropped from expert compute and pass through on the residual
-stream. ``capacity_factor=None`` = dropless (C = tokens_per_group).
+Capacity (paper §2, padded dispatchers only): ``C = ceil(k *
+tokens_per_group / E * CF)``; overflowing tokens are dropped from expert
+compute and pass through on the residual stream. ``capacity_factor=None`` =
+dropless (padded layout: C = tokens_per_group; sorted layout: exact).
 
 Expert placement follows the FoldingPlan: 'expert' -> EP axis when the
 expert count divides it, else expert hidden dim -> 'model' (expert-TP) —
@@ -18,19 +25,34 @@ MoE Parallel Folding on a fixed physical mesh.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig, MoEConfig
+from repro.core.dispatch import (
+    capacity,
+    dispatch_tables,
+    expert_choice_tables,
+    get_dispatcher,
+)
 from repro.core.router import route, router_decl
 from repro.models.layers import mlp_apply, mlp_decl
 from repro.sharding.rules import FoldingPlan, ParamDecl
+
+# Backward-compat alias: tests/benchmarks import the table builder under its
+# pre-subsystem name.
+_dispatch_tables = dispatch_tables
+
+__all__ = [
+    "moe_decl",
+    "moe_apply",
+    "capacity",
+    "dispatch_tables",
+    "_dispatch_tables",
+    "expert_choice_tables",
+]
 
 
 def moe_decl(cfg: ModelConfig, moe: MoEConfig) -> Dict[str, Any]:
@@ -49,194 +71,6 @@ def moe_decl(cfg: ModelConfig, moe: MoEConfig) -> Dict[str, Any]:
     if moe.dense_residual:
         decls["dense_residual"] = mlp_decl(D, cfg.d_ff, dt)
     return decls
-
-
-def capacity(moe: MoEConfig, tokens_per_group: int) -> int:
-    if moe.capacity_factor is None:
-        return tokens_per_group  # dropless: worst case, one expert takes all
-    c = math.ceil(moe.top_k * tokens_per_group / moe.num_experts * moe.capacity_factor)
-    # an expert can receive each token at most once -> capacity <= T
-    return max(min(int(c), tokens_per_group), 1)
-
-
-def _num_groups(plan: Optional[FoldingPlan], total_tokens: int, batch: int) -> int:
-    """Tokens are dispatched in groups (GShard-style) so capacity and the
-    dispatch working set stay per-data-shard. Groups = batch shards."""
-    if plan is None:
-        return 1
-    g = int(np.prod([plan.mesh.shape[a] for a in plan.batch_axes])) or 1
-    while g > 1 and (batch % g != 0 or total_tokens % g != 0):
-        g -= 1
-    return max(g, 1)
-
-
-def expert_choice_tables(
-    probs_full: jax.Array, E: int, C: int
-) -> Tuple[jax.Array, jax.Array]:
-    """Expert-Choice routing (Zhou et al., cited by the paper as the
-    alternative to Top-k): each EXPERT picks its top-C tokens by router
-    probability — perfect load balance by construction, no capacity
-    overflow, variable experts-per-token. probs_full: (T, E).
-    Returns (sel (E,C) token ids, slot_gate (E,C))."""
-    scores = probs_full.T  # (E, T)
-    g, sel = jax.lax.top_k(scores, C)  # per-expert top-C tokens
-    return sel.astype(jnp.int32), g.astype(jnp.float32)
-
-
-def _dispatch_tables(
-    idx: jax.Array, gates: jax.Array, E: int, C: int
-) -> Tuple[jax.Array, jax.Array]:
-    """Per-group dispatch bookkeeping.
-
-    idx/gates: (T, k). Returns (sel (E, C) int32 token ids,
-    slot_gate (E, C) fp32 combine weights). Overflow (position >= C) is
-    dropped: its slot_gate is 0. Priority is token-major order (the paper /
-    Megatron drop rule)."""
-    T, k = idx.shape
-    flat_e = idx.reshape(T * k)
-    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (Tk, E)
-    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1  # (Tk,)
-    keep = pos < C
-    safe_pos = jnp.where(keep, pos, C)  # overflow -> dump column C
-    token_id = (jnp.arange(T * k, dtype=jnp.int32) // k).astype(jnp.int32)
-    gate_flat = jnp.where(keep, gates.reshape(T * k), 0.0)
-
-    sel = jnp.zeros((E, C + 1), jnp.int32).at[flat_e, safe_pos].set(token_id)
-    slot_gate = jnp.zeros((E, C + 1), jnp.float32).at[flat_e, safe_pos].set(gate_flat)
-    return sel[:, :C], slot_gate[:, :C]
-
-
-def _expert_ffn(experts, xe: jax.Array, use_kernel: bool = False) -> jax.Array:
-    """xe: (..., E, C, D) -> (..., E, C, D). Fused-SwiGLU expert GEMM; the
-    Pallas kernel (kernels/expert_gemm.py) implements this contraction on
-    TPU and is validated against this XLA path."""
-    if use_kernel:
-        from repro.kernels.ops import expert_gemm
-
-        return expert_gemm(xe, experts["w_gate"], experts["w_up"], experts["w_down"])
-    g = jnp.einsum("...ecd,edf->...ecf", xe, experts["w_gate"])
-    u = jnp.einsum("...ecd,edf->...ecf", xe, experts["w_up"])
-    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
-    return jnp.einsum("...ecf,efd->...ecd", h, experts["w_down"])
-
-
-# ---------------------------------------------------------------------------
-# AllGather dispatcher (global-view pjit)
-# ---------------------------------------------------------------------------
-
-
-def _moe_allgather(
-    cfg: ModelConfig,
-    moe: MoEConfig,
-    plan: Optional[FoldingPlan],
-    params,
-    x: jax.Array,  # (T, D) flattened tokens, replicated over the EP axis
-    gates: jax.Array,
-    idx: jax.Array,
-    groups: int,
-    use_kernel: bool,
-) -> jax.Array:
-    T, D = x.shape
-    E, k = moe.num_experts, moe.top_k
-    Tg = T // groups
-    C = capacity(moe, Tg)
-
-    xg = x.reshape(groups, Tg, D)
-    if moe.router_type == "expert_choice":
-        # gates here carries the full (T, E) probability matrix
-        sel, slot_gate = jax.vmap(lambda p: expert_choice_tables(p, E, C))(
-            gates.reshape(groups, Tg, E)
-        )
-    else:
-        sel, slot_gate = jax.vmap(lambda i, g: _dispatch_tables(i, g, E, C))(
-            idx.reshape(groups, Tg, k), gates.reshape(groups, Tg, k)
-        )
-    if plan is not None:
-        xg = plan.constrain(xg, "batch", None, None)
-        sel = plan.constrain(sel, "batch", None, None)
-
-    # dispatch: local gather (tokens replicated over EP axis within a group)
-    xe = jax.vmap(lambda xs, s: xs[s])(xg, sel)  # (G, E, C, D)
-    if plan is not None:
-        xe = plan.constrain(xe, "batch", "expert", None, None)
-
-    ye = _expert_ffn(params["experts"], xe, use_kernel)  # (G, E, C, D)
-    ye = ye * slot_gate[..., None].astype(ye.dtype)
-
-    # combine: scatter-add back to token order; contributions from different
-    # expert shards reduce over the EP axis.
-    def combine(y_g, sel_g):
-        flat = y_g.reshape(E * C, D)
-        return jnp.zeros((Tg, D), flat.dtype).at[sel_g.reshape(E * C)].add(flat)
-
-    out = jax.vmap(combine)(ye, sel)  # (G, Tg, D)
-    if plan is not None:
-        out = plan.constrain(out, "batch", None, None)
-    return out.reshape(T, D)
-
-
-# ---------------------------------------------------------------------------
-# AllToAll dispatcher (shard_map + lax.all_to_all over the EP axis)
-# ---------------------------------------------------------------------------
-
-
-def _moe_alltoall(
-    cfg: ModelConfig,
-    moe: MoEConfig,
-    plan: FoldingPlan,
-    params,
-    x: jax.Array,  # (T, D)
-    gates: jax.Array,
-    idx: jax.Array,
-    use_kernel: bool,
-) -> jax.Array:
-    mesh = plan.mesh
-    ep_axis = plan.ep_axis
-    assert ep_axis is not None and plan.moe_mode == "ep"
-    ep = mesh.shape[ep_axis]
-    T, D = x.shape
-    E, k = moe.num_experts, moe.top_k
-    token_axes = tuple(plan.batch_axes) + (ep_axis,)
-    shards = int(np.prod([mesh.shape[a] for a in token_axes]))
-    assert T % shards == 0, (T, shards)
-    T_loc = T // shards
-    C = capacity(moe, T_loc)
-    E_loc = E // ep
-
-    w_specs = jax.tree.map(
-        lambda _: P(ep_axis, None, None), params["experts"]
-    )
-
-    def local_moe(x_l, gates_l, idx_l, experts_l):
-        # x_l: (T_loc, D); experts_l: (E_loc, D, F) etc.
-        sel, slot_gate = _dispatch_tables(idx_l, gates_l, E, C)  # (E, C)
-        send = x_l[sel]  # (E, C, D) outgoing slots, grouped by global expert
-        recv = jax.lax.all_to_all(
-            send.reshape(ep, E_loc, C, D), ep_axis, split_axis=0, concat_axis=0
-        )  # (ep, E_loc, C, D): slot block from every sender for my experts
-        xe = recv.transpose(1, 0, 2, 3).reshape(E_loc, ep * C, D)
-        ye = _expert_ffn(experts_l, xe[None], use_kernel)[0]
-        back = ye.reshape(E_loc, ep, C, D).transpose(1, 0, 2, 3)
-        ret = jax.lax.all_to_all(back, ep_axis, split_axis=0, concat_axis=0)
-        ret = ret.reshape(E, C, D) * slot_gate[..., None].astype(ye.dtype)
-        out = jnp.zeros((T_loc, D), ret.dtype).at[sel.reshape(E * C)].add(
-            ret.reshape(E * C, D)
-        )
-        return out
-
-    fn = shard_map(
-        local_moe,
-        mesh=mesh,
-        in_specs=(P(token_axes, None), P(token_axes, None), P(token_axes, None), w_specs),
-        out_specs=P(token_axes, None),
-        check_rep=False,
-    )
-    return fn(x, gates, idx, params["experts"])
-
-
-# ---------------------------------------------------------------------------
-# Public entry
-# ---------------------------------------------------------------------------
 
 
 def moe_apply(
@@ -259,21 +93,8 @@ def moe_apply(
     else:
         gates, idx, aux = route(moe, params["router"], xf, rng, train)
 
-    use_a2a = (
-        moe.dispatcher == "alltoall"
-        and moe.router_type != "expert_choice"  # EC gates are (T, E)
-        and plan is not None
-        and plan.moe_mode == "ep"
-        and T % int(
-            np.prod([plan.mesh.shape[a] for a in tuple(plan.batch_axes) + (plan.ep_axis,)])
-        )
-        == 0
-    )
-    if use_a2a:
-        out = _moe_alltoall(cfg, moe, plan, params, xf, gates, idx, use_kernel)
-    else:
-        groups = _num_groups(plan, T, B)
-        out = _moe_allgather(cfg, moe, plan, params, xf, gates, idx, groups, use_kernel)
+    dispatcher = get_dispatcher(cfg, moe, plan, T, B)
+    out = dispatcher.apply(params["experts"], xf, gates, idx, use_kernel)
 
     out = out.reshape(B, S, D).astype(x.dtype)
     if moe.dense_residual:

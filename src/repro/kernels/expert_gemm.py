@@ -3,7 +3,11 @@
 The MoE expert FFN is the paper's dominant compute hot-spot (it is what the
 46.8%-MFU engineering in Table 2 is about). On H100 Megatron uses a CUTLASS
 grouped GEMM; the TPU adaptation re-tiles for the MXU and the HBM->VMEM
-hierarchy:
+hierarchy. Two layouts, matching the two dispatcher families
+(core/dispatch/):
+
+Padded layout (``expert_gemm``, allgather/alltoall dispatchers): dense
+(E, C, D) buffer, one grid slice per expert.
 
 * kernel 1 (``gate_up``): h = silu(x @ w_gate) * (x @ w_up). Both gemms
   share the same x tile (one HBM read), accumulate in fp32 VMEM scratch over
@@ -12,10 +16,21 @@ hierarchy:
   saves 2*E*C*F bf16 writes + reads per layer vs. the XLA path).
 * kernel 2 (``down``): y = h @ w_down, a plain k-blocked grouped matmul.
 
+Sorted layout (``grouped_gemm``, sorted dropless dispatcher): flat (N, D)
+expert-sorted buffer with per-expert ``group_sizes``, each expert's region
+aligned to the row-tile size. Per-row-tile expert ids and valid-row counts
+are scalar-prefetched (PrefetchScalarGridSpec) so each tile loads exactly
+its expert's weight block; rows past the expert's count are masked in the
+epilogue and fully-empty tiles skip the MXU work entirely — the
+group-size-aware part that makes dropless cost scale with T*k instead of
+E*C. fp32 accumulation and the fused SwiGLU epilogue are identical to the
+padded kernels.
+
 Tiles default to (bc, bf, bd) = (128, 512, 512) — MXU-aligned multiples of
 128, VMEM footprint ~= bc*bd + 2*bd*bf + 2*bc*bf(fp32) ~= 3.3 MB at bf16.
 Expert-parallel composition: the kernel sees the *local* expert shard
-(E_loc, ...); dispatch/combine collectives live a level up in core/moe.py.
+(E_loc, ...); dispatch/combine collectives live a level up in
+core/dispatch/.
 
 Validated in interpret mode against kernels/ref.py over shape/dtype sweeps
 (tests/test_kernels.py).
@@ -120,4 +135,127 @@ def expert_gemm(
         scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
         interpret=interpret,
     )(h, w_down)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Group-size-aware grouped GEMM over the flat expert-sorted layout
+# ---------------------------------------------------------------------------
+
+
+def _grouped_gate_up_kernel(
+    tg_ref, tr_ref, x_ref, wg_ref, wu_ref, h_ref, g_acc, u_acc, *, nd: int,
+    bc: int, bf: int,
+):
+    t, d = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        u_acc[...] = jnp.zeros_like(u_acc)
+
+    valid = tr_ref[t]
+
+    @pl.when(valid > 0)  # fully-empty tiles (group padding) skip the MXU
+    def _compute():
+        x = x_ref[...]
+        g_acc[...] += jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        u_acc[...] += jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(d == nd - 1)
+    def _epilogue():
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bc, bf), 0)
+        h = _silu(g_acc[...]) * u_acc[...]
+        h_ref[...] = jnp.where(rows < valid, h, 0.0).astype(h_ref.dtype)
+
+
+def _grouped_down_kernel(
+    tg_ref, tr_ref, h_ref, wd_ref, y_ref, acc, *, nf: int, bc: int, bd: int
+):
+    t, f = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    valid = tr_ref[t]
+
+    @pl.when(valid > 0)
+    def _compute():
+        acc[...] += jnp.dot(h_ref[...], wd_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(f == nf - 1)
+    def _write():
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bc, bd), 0)
+        y_ref[...] = jnp.where(rows < valid, acc[...], 0.0).astype(y_ref.dtype)
+
+
+def group_tiling(group_sizes: jax.Array, num_tiles: int, bc: int):
+    """Per-row-tile metadata for the tile-aligned expert-sorted buffer:
+    (tile_group (nt,) expert id, tile_rows (nt,) valid rows in [0, bc]).
+    Tiles past the last group get tile_rows 0 (skipped + masked)."""
+    E = group_sizes.shape[0]
+    padded = ((group_sizes + bc - 1) // bc) * bc
+    ends_pad = jnp.cumsum(padded)
+    starts_pad = ends_pad - padded
+    tile_start = jnp.arange(num_tiles, dtype=jnp.int32) * bc
+    tg = jnp.searchsorted(ends_pad, tile_start, side="right")
+    tg = jnp.clip(tg, 0, E - 1).astype(jnp.int32)
+    tr = jnp.clip(group_sizes[tg] - (tile_start - starts_pad[tg]), 0, bc)
+    return tg, tr.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def grouped_gemm(
+    xs: jax.Array,  # (N_pad, D) expert-sorted rows, groups row-tile aligned
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+    group_sizes: jax.Array,  # (E,) int32 valid rows per expert
+    blocks: Tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jax.Array:
+    N_pad, D = xs.shape
+    E, _, F = w_gate.shape
+    bc = blocks[0]
+    assert N_pad % bc == 0, (N_pad, bc)
+    bf, bd = (_pick(b, d) for b, d in zip(blocks[1:], (F, D)))
+    nt, nf, nd = N_pad // bc, F // bf, D // bd
+    tg, tr = group_tiling(group_sizes, nt, bc)
+
+    h = pl.pallas_call(
+        functools.partial(_grouped_gate_up_kernel, nd=nd, bc=bc, bf=bf),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nt, nf, nd),
+            in_specs=[
+                pl.BlockSpec((bc, bd), lambda t, f, d, tg, tr: (t, d)),
+                pl.BlockSpec((1, bd, bf), lambda t, f, d, tg, tr: (tg[t], d, f)),
+                pl.BlockSpec((1, bd, bf), lambda t, f, d, tg, tr: (tg[t], d, f)),
+            ],
+            out_specs=pl.BlockSpec((bc, bf), lambda t, f, d, tg, tr: (t, f)),
+            scratch_shapes=[
+                pltpu.VMEM((bc, bf), jnp.float32),
+                pltpu.VMEM((bc, bf), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((N_pad, F), xs.dtype),
+        interpret=interpret,
+    )(tg, tr, xs, w_gate, w_up)
+
+    y = pl.pallas_call(
+        functools.partial(_grouped_down_kernel, nf=nf, bc=bc, bd=bd),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nt, nd, nf),
+            in_specs=[
+                pl.BlockSpec((bc, bf), lambda t, d, f, tg, tr: (t, f)),
+                pl.BlockSpec((1, bf, bd), lambda t, d, f, tg, tr: (tg[t], f, d)),
+            ],
+            out_specs=pl.BlockSpec((bc, bd), lambda t, d, f, tg, tr: (t, d)),
+            scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((N_pad, D), xs.dtype),
+        interpret=interpret,
+    )(tg, tr, h, w_down)
     return y

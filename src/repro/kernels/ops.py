@@ -2,7 +2,8 @@
 
 On non-TPU backends (this container) the kernels execute in interpret mode
 — the kernel body runs in Python on CPU for correctness validation; on TPU
-they compile to Mosaic. ``core/moe.py`` calls ``expert_gemm`` when
+they compile to Mosaic. The dispatch subsystem (``core/dispatch``) calls
+``expert_gemm`` (padded layout) or ``grouped_gemm`` (sorted layout) when
 ``use_kernel=True``; models can call ``flash_attention`` in place of the
 blockwise XLA path.
 """
@@ -34,6 +35,30 @@ def expert_gemm(xe, w_gate, w_up, w_down, blocks=_eg.DEFAULT_BLOCKS):
         y = y.reshape(E, -1, C, D).transpose(1, 0, 2, 3).reshape(lead + (E, C, D))
         return y
     return _eg.expert_gemm(xe, w_gate, w_up, w_down, blocks=blocks, interpret=_interpret())
+
+
+def grouped_gemm(xs, w_gate, w_up, w_down, group_sizes, row_block=_eg.DEFAULT_BLOCKS[0]):
+    """Group-size-aware grouped GEMM over the flat expert-sorted layout the
+    sorted dispatcher produces: (N_pad, D) rows, each expert's region
+    row_block-aligned, group_sizes (E,) valid rows per expert."""
+    blocks = (row_block,) + _eg.DEFAULT_BLOCKS[1:]
+    return _eg.grouped_gemm(
+        xs, w_gate, w_up, w_down, group_sizes, blocks=blocks, interpret=_interpret()
+    )
+
+
+def grouped_gemm_xla(xs, w_gate, w_up, w_down, group_sizes):
+    """XLA path for the sorted layout (compact buffer, row_block=1):
+    ``lax.ragged_dot`` is the native grouped GEMM; falls back to the
+    per-expert masked reference when unavailable."""
+    if not hasattr(jax.lax, "ragged_dot"):
+        from repro.kernels.ref import grouped_gemm_ref
+
+        return grouped_gemm_ref(xs, w_gate, w_up, w_down, group_sizes)
+    g = jax.lax.ragged_dot(xs, w_gate, group_sizes)
+    u = jax.lax.ragged_dot(xs, w_up, group_sizes)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xs.dtype) * u
+    return jax.lax.ragged_dot(h, w_down, group_sizes)
 
 
 def flash_attention(

@@ -23,6 +23,34 @@ def expert_gemm_ref(
     ).astype(xe.dtype)
 
 
+def grouped_gemm_ref(
+    xs: jax.Array,  # (N, D) expert-sorted rows (may be tile-align padded)
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+    group_sizes: jax.Array,  # (E,) valid rows per expert
+    row_block: int = 1,
+) -> jax.Array:
+    """Group-size-aware fused SwiGLU FFN over the flat expert-sorted layout.
+    Each expert's region starts at its (row_block-aligned) offset; rows past
+    ``group_sizes[e]`` produce zeros. O(E) python loop — oracle only."""
+    N, D = xs.shape
+    E = w_gate.shape[0]
+    b = row_block
+    padded = ((group_sizes + b - 1) // b) * b
+    starts = jnp.cumsum(padded) - padded
+    row = jnp.arange(N)
+    out = jnp.zeros((N, w_down.shape[-1]), jnp.float32)
+    for e in range(E):
+        g = jnp.dot(xs, w_gate[e], preferred_element_type=jnp.float32)
+        u = jnp.dot(xs, w_up[e], preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(xs.dtype)
+        y = jnp.dot(h, w_down[e], preferred_element_type=jnp.float32)
+        mine = (row >= starts[e]) & (row < starts[e] + group_sizes[e])
+        out = jnp.where(mine[:, None], y, out)
+    return out.astype(xs.dtype)
+
+
 def flash_attention_ref(
     q: jax.Array,  # (B, Sq, H, d)
     k: jax.Array,  # (B, Sk, H, d)  (kv heads pre-broadcast to H)

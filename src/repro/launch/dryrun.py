@@ -84,10 +84,10 @@ def lower_combo(
     if cfg is None:
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod, "status": "skipped",
                 "reason": SKIPS.get((arch, shape_name), "long-context policy")}
-    if dispatcher and cfg.moe is not None:
-        import dataclasses
+    if dispatcher:
+        from repro.config import with_dispatcher
 
-        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatcher=dispatcher))
+        cfg = with_dispatcher(cfg, dispatcher)
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     plan = FoldingPlan.make(cfg, mesh)
@@ -166,7 +166,8 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--dispatcher", default=None, choices=[None, "allgather", "alltoall"])
+    ap.add_argument("--dispatcher", default=None,
+                    choices=[None, "allgather", "alltoall", "sorted"])
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--save-hlo", default=None, help="dir for gzipped HLO text")
     args = ap.parse_args()

@@ -26,6 +26,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--dispatcher", default=None,
+        choices=["allgather", "alltoall", "sorted"],
+        help="MoE token dispatcher for decode (default: config's choice)",
+    )
+    ap.add_argument("--use-kernel", action="store_true")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,7 +42,8 @@ def main(argv=None):
         cfg = cfg.replace(num_prefix_embeds=0, family="dense")
     params = init_from_decls(model_decl(cfg), jax.random.PRNGKey(args.seed))
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
-                           max_seq=args.prompt_len + args.max_new + 8)
+                           max_seq=args.prompt_len + args.max_new + 8,
+                           dispatcher=args.dispatcher, use_kernel=args.use_kernel)
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),

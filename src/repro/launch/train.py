@@ -34,7 +34,12 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--top-k", type=int, default=2)
     ap.add_argument("--cf", type=float, default=4.0, help="<=0 => dropless")
     ap.add_argument("--router", default="mixtral", choices=["mixtral", "st"])
-    ap.add_argument("--dispatcher", default="allgather", choices=["allgather", "alltoall"])
+    ap.add_argument(
+        "--dispatcher", default=None,
+        choices=["allgather", "alltoall", "sorted"],
+        help="MoE token dispatcher; default keeps the config's choice "
+             "(sorted = dropless, recommended with --cf <= 0)",
+    )
     ap.add_argument("--from-ckpt", default=None)
     ap.add_argument("--save-ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -52,10 +57,13 @@ def main(argv=None):
     if args.upcycle:
         from repro.core.upcycle import upcycle_config, upcycle_params
 
+        cf = args.cf if args.cf > 0 else None
+        # dropless default: the sorted dispatcher computes every assignment
+        # without the padded layout's C = T blow-up
+        dispatcher = args.dispatcher or ("sorted" if cf is None else "allgather")
         moe = MoEConfig(
-            num_experts=args.upcycle, top_k=args.top_k,
-            capacity_factor=args.cf if args.cf > 0 else None,
-            router_type=args.router, dispatcher=args.dispatcher,
+            num_experts=args.upcycle, top_k=args.top_k, capacity_factor=cf,
+            router_type=args.router, dispatcher=dispatcher,
         )
         dense_cfg = cfg
         cfg = upcycle_config(dense_cfg, moe)
@@ -81,7 +89,9 @@ def main(argv=None):
                          tcfg.blend_ratio, args.seed, extra)
     t, a = cfg.param_counts()
     print(f"training {cfg.name}: {t/1e6:.1f}M total / {a/1e6:.1f}M active params")
-    tr = Trainer(cfg, tcfg, params=params, data_iter=it, use_kernel=args.use_kernel)
+    # archs that are already MoE take the --dispatcher override here
+    tr = Trainer(cfg, tcfg, params=params, data_iter=it,
+                 use_kernel=args.use_kernel, dispatcher=args.dispatcher)
     tr.run(args.steps)
     if args.save_ckpt:
         from repro.checkpoint.ckpt import save_checkpoint

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig
+from repro.config import ModelConfig, with_dispatcher
 from repro.models.model import cache_decl, decode_step, prefill_forward
 from repro.sharding.rules import FoldingPlan, ParamDecl
 
@@ -40,10 +40,17 @@ class ServingEngine:
         max_batch: int = 4,
         max_seq: int = 256,
         greedy: bool = True,
+        dispatcher: Optional[str] = None,
+        use_kernel: bool = False,
     ):
+        # MoE decode runs through the same dispatch subsystem as training;
+        # `dispatcher` overrides the config's token dispatcher (e.g. "sorted"
+        # for dropless decode), `use_kernel` enables the Pallas expert GEMMs.
+        cfg = with_dispatcher(cfg, dispatcher)
         self.cfg, self.params, self.plan = cfg, params, plan
         self.max_batch, self.max_seq = max_batch, max_seq
         self.greedy = greedy
+        self.use_kernel = use_kernel
         W = max_seq if cfg.sliding_window is None else min(max_seq, cfg.sliding_window)
         self.cache_len = W
         decls = cache_decl(cfg, max_batch, max_seq)
@@ -55,7 +62,7 @@ class ServingEngine:
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
         self._decode = jax.jit(
-            lambda p, c, t: decode_step(cfg, plan, p, c, t)
+            lambda p, c, t: decode_step(cfg, plan, p, c, t, use_kernel=self.use_kernel)
         )
         self._next_tok = jnp.zeros((max_batch,), jnp.int32)
 
@@ -68,7 +75,10 @@ class ServingEngine:
         cache at ``slot``."""
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         logits, rc = jax.jit(
-            lambda p, b: prefill_forward(self.cfg, self.plan, p, b, cache_len=self.cache_len)
+            lambda p, b: prefill_forward(
+                self.cfg, self.plan, p, b, cache_len=self.cache_len,
+                use_kernel=self.use_kernel,
+            )
         )(self.params, batch)
 
         def splice(dst, src):

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, TrainConfig
+from repro.config import ModelConfig, TrainConfig, with_dispatcher
 from repro.models.model import loss_fn, model_decl
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update, opt_state_shardings
 from repro.optim.schedule import cosine_schedule
@@ -101,7 +101,9 @@ class Trainer:
         params: Optional[Any] = None,
         data_iter: Optional[Iterator[Dict[str, np.ndarray]]] = None,
         use_kernel: bool = False,
+        dispatcher: Optional[str] = None,
     ):
+        cfg = with_dispatcher(cfg, dispatcher)
         self.cfg, self.tcfg, self.plan = cfg, tcfg, plan
         decls = model_decl(cfg)
         rng = jax.random.PRNGKey(tcfg.seed)

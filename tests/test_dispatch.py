@@ -1,0 +1,154 @@
+"""TokenDispatcher subsystem: three-way dispatcher parity, sorted-dropless
+semantics, and the upcycled-init dense-match invariant (paper Fig. 3) under
+the sorted path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, MoEConfig, with_dispatcher
+from repro.core.dispatch import (
+    AllGatherDispatcher,
+    SortedDispatcher,
+    get_dispatcher,
+)
+from repro.core.moe import moe_apply, moe_decl
+from repro.sharding.rules import init_from_decls
+
+
+def _cfg(E=4, k=2, cf=None, dispatcher="allgather", **kw):
+    moe = MoEConfig(num_experts=E, top_k=k, capacity_factor=cf,
+                    dispatcher=dispatcher, **kw)
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128,
+                      vocab_divisor=64, moe=moe)
+    return cfg, moe
+
+
+def _params(cfg, moe, seed=0):
+    params = init_from_decls(moe_decl(cfg, moe), jax.random.PRNGKey(seed))
+    return jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+def test_registry_and_fallbacks():
+    cfg, moe = _cfg(dispatcher="sorted")
+    assert isinstance(get_dispatcher(cfg, moe, None, 64, 2), SortedDispatcher)
+    # alltoall without an EP plan falls back to allgather
+    cfg2, moe2 = _cfg(dispatcher="alltoall")
+    assert isinstance(get_dispatcher(cfg2, moe2, None, 64, 2), AllGatherDispatcher)
+    # expert-choice routing has no flat top-k assignment list to sort
+    cfg3, moe3 = _cfg(dispatcher="sorted", router_type="expert_choice")
+    assert isinstance(get_dispatcher(cfg3, moe3, None, 64, 2), AllGatherDispatcher)
+    with pytest.raises(AssertionError):
+        MoEConfig(dispatcher="bogus")
+
+
+def test_sorted_matches_allgather_dropless():
+    """Fixed routing: the sorted dropless dispatcher's output equals the
+    padded allgather reference (both dropless, fp32)."""
+    cfg, moe = _cfg(cf=None)
+    params = _params(cfg, moe)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+    y_ag, _ = moe_apply(cfg, moe, None, params, x)
+    moe_s = dataclasses.replace(moe, dispatcher="sorted")
+    y_s, _ = moe_apply(cfg, moe_s, None, params, x)
+    np.testing.assert_allclose(np.asarray(y_ag), np.asarray(y_s), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sorted_kernel_matches_xla(dtype):
+    """The group-size-aware Pallas path (tile-aligned layout) agrees with
+    the ragged_dot XLA path through the full dispatcher pipeline."""
+    cfg, moe = _cfg(dispatcher="sorted")
+    params = jax.tree.map(
+        lambda x: x.astype(dtype), _params(cfg, moe)
+    )
+    x = (jax.random.normal(jax.random.PRNGKey(2), (2, 16, 32)) * 0.3).astype(dtype)
+    y0, _ = moe_apply(cfg, moe, None, params, x, use_kernel=False)
+    y1, _ = moe_apply(cfg, moe, None, params, x, use_kernel=True)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(y0, np.float32), np.asarray(y1, np.float32), atol=atol
+    )
+
+
+def test_sorted_is_dropless_under_imbalance():
+    """All tokens routed to one expert: the sorted path computes every
+    assignment (no capacity drops), unlike a CF-bounded padded dispatcher."""
+    cfg, moe = _cfg(E=4, k=1, dispatcher="sorted")
+    params = _params(cfg, moe)
+    params["router"]["w_g"] = jnp.zeros_like(params["router"]["w_g"]).at[:, 0].set(10.0)
+    x = jnp.ones((1, 32, 32), jnp.float32)
+    y, _ = moe_apply(cfg, moe, None, params, x)
+    nonzero = np.asarray(jnp.any(jnp.abs(y[0]) > 1e-9, axis=-1))
+    assert nonzero.sum() == 32, nonzero.sum()
+
+
+def test_sorted_upcycled_init_matches_dense_ffn():
+    """Identical experts + mixtral gates under the sorted path == the dense
+    FFN exactly — the paper's upcycling warm-start invariant (Fig. 3)."""
+    cfg, moe = _cfg(dispatcher="sorted")
+    params = _params(cfg, moe)
+    for k in ("w_gate", "w_up", "w_down"):
+        params["experts"][k] = jnp.broadcast_to(
+            params["experts"][k][0:1], params["experts"][k].shape
+        )
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+    y, _ = moe_apply(cfg, moe, None, params, x)
+    from repro.models.layers import mlp_apply
+
+    dense = {k: params["experts"][k][0] for k in ("w_gate", "w_up", "w_down")}
+    y_ref = mlp_apply(dense, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+
+def test_sorted_gradients_flow():
+    """The argsort/gather/scatter pipeline is differentiable end-to-end."""
+    cfg, moe = _cfg(dispatcher="sorted")
+    params = _params(cfg, moe)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 32)) * 0.3
+
+    def loss(p):
+        y, _ = moe_apply(cfg, moe, None, p, x)
+        return jnp.sum(jnp.square(y))
+
+    g = jax.grad(loss)(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(v))) for v in jax.tree.leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0
+    for k in ("w_gate", "w_up", "w_down"):
+        assert float(jnp.sum(jnp.abs(g["experts"][k]))) > 0, k
+
+
+def test_with_dispatcher_helper():
+    cfg, _ = _cfg(dispatcher="allgather")
+    assert with_dispatcher(cfg, "sorted").moe.dispatcher == "sorted"
+    assert with_dispatcher(cfg, None).moe.dispatcher == "allgather"
+    dense = ModelConfig(name="d", family="dense")
+    assert with_dispatcher(dense, "sorted") is dense
+
+
+def test_alltoall_parity_on_trivial_mesh():
+    """alltoall == allgather == sorted on a 1-device EP mesh (the full
+    multi-device parity check lives in test_distributed.py)."""
+    from repro.sharding.rules import FoldingPlan
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg, moe = _cfg(cf=None, dispatcher="alltoall")
+    params = _params(cfg, moe)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 32)) * 0.3
+    plan = FoldingPlan.make(cfg, mesh)
+    assert plan.moe_mode == "ep"
+    with mesh:
+        y_a2a, _ = jax.jit(
+            lambda p, x: moe_apply(cfg, moe, plan, p, x)
+        )(params, x)
+        ys = {}
+        for name in ("allgather", "sorted"):
+            moe_n = dataclasses.replace(moe, dispatcher=name)
+            ys[name], _ = jax.jit(
+                lambda p, x, m=moe_n: moe_apply(cfg, m, plan, p, x)
+            )(params, x)
+    np.testing.assert_allclose(np.asarray(y_a2a), np.asarray(ys["allgather"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_a2a), np.asarray(ys["sorted"]), atol=1e-5)

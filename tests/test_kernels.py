@@ -43,6 +43,77 @@ def test_expert_gemm_group_batched(rng):
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
 
 
+GG_CASES = [  # (E, D, F, group_sizes, row_block)
+    (4, 32, 64, (16, 0, 7, 9), 8),
+    (2, 64, 128, (128, 128), 128),  # exactly tile-aligned groups
+    (3, 96, 160, (1, 50, 13), 16),  # non-power-of-two dims, ragged groups
+    (4, 32, 64, (0, 0, 0, 40), 8),  # all tokens on one expert (imbalance)
+    (2, 32, 64, (0, 0), 8),  # nothing routed at all
+]
+
+
+@pytest.mark.parametrize("case", GG_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_gemm(rng, case, dtype):
+    """Group-size-aware grouped GEMM (sorted dropless layout) vs the
+    pure-jnp oracle, interpret mode."""
+    from repro.core.dispatch.sorted import aligned_rows
+    from repro.kernels.ops import grouped_gemm
+    from repro.kernels.ref import grouped_gemm_ref
+
+    E, D, F, gs, bc = case
+    gs = np.asarray(gs, np.int32)
+    N_pad = aligned_rows(int(gs.sum()), E, bc)
+    # build the tile-aligned expert-sorted buffer: valid rows random, padding
+    # rows POISONED (not zero) — the kernel must mask them, not rely on zeros
+    xs = np.full((N_pad, D), 7.5, np.float32)
+    padded = (gs + bc - 1) // bc * bc
+    starts = np.cumsum(padded) - padded
+    for e in range(E):
+        xs[starts[e]:starts[e] + gs[e]] = rng.standard_normal((gs[e], D)) * 0.3
+    xs = jnp.asarray(xs, dtype)
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), dtype) * 0.05
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), dtype) * 0.05
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), dtype) * 0.05
+    y = grouped_gemm(xs, wg, wu, wd, jnp.asarray(gs), row_block=bc)
+    yr = grouped_gemm_ref(xs, wg, wu, wd, jnp.asarray(gs), row_block=bc)
+    # compare valid rows; padding rows must come out exactly zero
+    valid = np.zeros(N_pad, bool)
+    for e in range(E):
+        valid[starts[e]:starts[e] + gs[e]] = True
+    atol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32)[valid], np.asarray(yr, np.float32)[valid], atol=atol
+    )
+    np.testing.assert_array_equal(np.asarray(y, np.float32)[~valid], 0.0)
+
+
+def test_grouped_gemm_matches_padded_expert_gemm(rng):
+    """Same tokens through both layouts: flat sorted+group_sizes == dense
+    padded (E, C, D) expert_gemm on the populated slots."""
+    from repro.kernels.ref import expert_gemm_ref, grouped_gemm_ref
+
+    E, C, D, F = 3, 8, 32, 64
+    gs = np.array([8, 3, 5], np.int32)
+    xe = np.zeros((E, C, D), np.float32)
+    for e in range(E):
+        xe[e, : gs[e]] = rng.standard_normal((gs[e], D)) * 0.3
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), jnp.float32) * 0.05
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), jnp.float32) * 0.05
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), jnp.float32) * 0.05
+    y_pad = expert_gemm_ref(jnp.asarray(xe), wg, wu, wd)
+    xs = np.concatenate([xe[e, : gs[e]] for e in range(E)])
+    y_sorted = grouped_gemm_ref(jnp.asarray(xs), wg, wu, wd, jnp.asarray(gs))
+    off = 0
+    for e in range(E):
+        np.testing.assert_allclose(
+            np.asarray(y_sorted)[off : off + gs[e]],
+            np.asarray(y_pad)[e, : gs[e]],
+            atol=1e-5,
+        )
+        off += gs[e]
+
+
 FA_CASES = [  # (B, Sq, Sk, H, KV, d, causal, window)
     (2, 64, 64, 4, 2, 32, True, None),
     (1, 32, 128, 4, 4, 64, True, None),  # decode-ish: Sq < Sk, right-aligned
