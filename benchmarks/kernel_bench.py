@@ -1,17 +1,119 @@
-"""Kernel microbench: Pallas expert_gemm / flash_attention vs their XLA
-reference paths, plus the padded-vs-sorted dropless dispatcher comparison.
+"""Kernel microbench: Pallas expert_gemm / grouped_gemm / flash_attention vs
+their XLA reference paths, forward AND backward, plus the padded-vs-sorted
+dropless dispatcher comparison.
+
 On this CPU container the Pallas kernels run in interpret mode (Python), so
-wall-times are NOT hardware-representative; we therefore report (a) XLA-path
-wall time as the throughput baseline, (b) kernel-vs-ref max error, and (c)
-derived HBM-traffic savings of the fused SwiGLU epilogue (the quantity the
-kernel exists to optimize on TPU)."""
+kernel wall-times are NOT hardware-representative; we therefore report
+(a) XLA-path fwd and fwd+bwd wall time as the throughput baseline,
+(b) kernel-vs-ref max error (fwd and grad), and (c) derived activation /
+HBM-traffic accounting — the quantities the kernels exist to optimize on
+TPU. The backward rows carry the recompute accounting: the custom_vjp saves
+only O(N*D) residuals, so ``residual_bytes`` (measured from the actual VJP
+residual pytree) vs ``xla_saved_bytes`` (the (N,F) gate/up/h intermediates
+autodiff would keep) is the per-layer activation-memory win, asserted here
+so a regression that starts saving an (N, F) residual fails the bench.
+
+Output: CSV on stdout, JSON via benchmarks.common.emit, and a
+machine-readable ``BENCH_kernels.json`` at the repo root so the perf
+trajectory is tracked across PRs.
+"""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.kernels.ops import expert_gemm, flash_attention, grouped_gemm_xla
+from repro.kernels.expert_gemm import grouped_gemm_residuals
+from repro.kernels.ops import (
+    expert_gemm,
+    flash_attention,
+    grouped_gemm,
+    grouped_gemm_xla,
+)
 from repro.kernels.ref import expert_gemm_ref, flash_attention_ref
+
+ROOT_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_kernels.json")
+
+
+def _grad_err(loss_a, loss_b, args):
+    ga = jax.grad(loss_a, argnums=tuple(range(len(args))))(*args)
+    gb = jax.grad(loss_b, argnums=tuple(range(len(args))))(*args)
+    return max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(ga, gb)
+    )
+
+
+def expert_gemm_rows(rng, rows):
+    for (E, C, D, F) in [(4, 256, 512, 1024), (8, 128, 256, 768)]:
+        xe = jnp.asarray(rng.standard_normal((E, C, D)), jnp.bfloat16) * 0.3
+        wg = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
+        wu = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
+        wd = jnp.asarray(rng.standard_normal((E, F, D)), jnp.bfloat16) * 0.05
+        args = (xe, wg, wu, wd)
+        ref = jax.jit(expert_gemm_ref)
+        us_fwd = timed(ref, *args) * 1e6
+        ref_loss = jax.jit(lambda *a: jnp.sum(jnp.square(expert_gemm_ref(*a))))
+        us_bwd = timed(jax.jit(jax.grad(ref_loss, argnums=(0, 1, 2, 3))), *args) * 1e6
+        err = float(jnp.max(jnp.abs(
+            expert_gemm(*args).astype(jnp.float32) - ref(*args).astype(jnp.float32)
+        )))
+        saved = 2 * E * C * F * 2 * 2  # gate+up bf16, write+read, bytes
+        rows.append({
+            "name": f"expert_gemm E{E} C{C} D{D} F{F}",
+            "us_fwd_xla_ref": round(us_fwd, 1),
+            "us_fwdbwd_xla_ref": round(us_bwd, 1),
+            "kernel_max_err": round(err, 5),
+            "gemm_rows": E * C,
+            "activation_bytes": E * C * (D + F + D) * 2,
+            "derived": f"fused epilogue saves {saved/1e6:.1f}MB HBM traffic/layer",
+        })
+
+
+def grouped_gemm_rows(rng, rows):
+    """Fwd+bwd on the sorted dropless layout at the llama3-e8t2 routing
+    shape, with the recompute residual accounting."""
+    E, k, T, D, F = 8, 2, 1024, 256, 512
+    N = T * k
+    bc = 128
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), jnp.bfloat16) * 0.05
+    gs = jnp.full((E,), N // E, jnp.int32)  # balanced routing
+    xs = jnp.asarray(rng.standard_normal((N, D)), jnp.bfloat16) * 0.3
+    args = (xs, wg, wu, wd)
+
+    xla_loss = jax.jit(lambda *a: jnp.sum(jnp.square(grouped_gemm_xla(*a, gs))))
+    us_fwd = timed(jax.jit(grouped_gemm_xla), *args, gs) * 1e6
+    us_bwd = timed(jax.jit(jax.grad(xla_loss, argnums=(0, 1, 2, 3))), *args) * 1e6
+
+    # gradient parity kernel vs XLA (N is already bc-aligned and balanced)
+    k_loss = lambda *a: jnp.sum(jnp.square(grouped_gemm(*a, gs, row_block=bc)))
+    grad_err = _grad_err(k_loss, lambda *a: xla_loss(*a), args)
+
+    # recompute accounting: measured VJP residuals vs what autodiff keeps
+    res = grouped_gemm_residuals(xs, wg, wu, wd, gs, blocks=(bc, 512, 512))
+    residual_bytes = sum(int(np.prod(r.shape)) * r.dtype.itemsize for r in res)
+    res_shapes = [tuple(r.shape) for r in res]
+    assert (N, F) not in res_shapes, (
+        f"recompute regression: (N, F) intermediate saved as residual: {res_shapes}"
+    )
+    xla_saved = 3 * N * F * 2  # gate, up, h in bf16 kept by plain autodiff
+    rows.append({
+        "name": f"grouped_gemm_bwd e8t2 N{N} D{D} F{F} bc{bc}",
+        "us_fwd_xla_ref": round(us_fwd, 1),
+        "us_fwdbwd_xla_ref": round(us_bwd, 1),
+        "kernel_max_err": round(grad_err, 5),
+        "gemm_rows": N,
+        "activation_bytes": residual_bytes,
+        "derived": (
+            f"recompute saves {xla_saved/1e6:.1f}MB residuals/layer "
+            f"(O(N*F) -> O(N*D): {residual_bytes/1e6:.1f}MB saved inputs)"
+        ),
+    })
 
 
 def dispatcher_comparison(rng, rows):
@@ -35,14 +137,18 @@ def dispatcher_comparison(rng, rows):
     act_bytes = lambda rows_: rows_ * (D + F + D) * 2  # x in, h, y out (bf16)
     rows.append({
         "name": f"dispatch e8t2 padded-dropless E{E} C{C} D{D} F{F}",
-        "us_per_call_xla_ref": round(us_pad, 1),
+        "us_fwd_xla_ref": round(us_pad, 1),
         "kernel_max_err": 0.0,
+        "gemm_rows": E * C,
+        "activation_bytes": act_bytes(E * C),
         "derived": f"{E*C} gemm rows, {act_bytes(E*C)/1e6:.1f}MB activations",
     })
     rows.append({
         "name": f"dispatch e8t2 sorted-dropless N{T*k} D{D} F{F}",
-        "us_per_call_xla_ref": round(us_sort, 1),
+        "us_fwd_xla_ref": round(us_sort, 1),
         "kernel_max_err": 0.0,
+        "gemm_rows": T * k,
+        "activation_bytes": act_bytes(T * k),
         "derived": (
             f"{T*k} gemm rows, {act_bytes(T*k)/1e6:.1f}MB activations "
             f"({E*C/(T*k):.0f}x fewer rows than padded)"
@@ -50,43 +156,53 @@ def dispatcher_comparison(rng, rows):
     })
 
 
-def main():
-    rng = np.random.default_rng(0)
-    rows = []
-    for (E, C, D, F) in [(4, 256, 512, 1024), (8, 128, 256, 768)]:
-        xe = jnp.asarray(rng.standard_normal((E, C, D)), jnp.bfloat16) * 0.3
-        wg = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
-        wu = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
-        wd = jnp.asarray(rng.standard_normal((E, F, D)), jnp.bfloat16) * 0.05
-        ref = jax.jit(expert_gemm_ref)
-        us = timed(ref, xe, wg, wu, wd) * 1e6
-        y = expert_gemm(xe, wg, wu, wd)
-        err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - ref(xe, wg, wu, wd).astype(jnp.float32))))
-        saved = 2 * E * C * F * 2 * 2  # gate+up bf16, write+read, bytes
-        rows.append({
-            "name": f"expert_gemm E{E} C{C} D{D} F{F}",
-            "us_per_call_xla_ref": round(us, 1),
-            "kernel_max_err": round(err, 5),
-            "derived": f"fused epilogue saves {saved/1e6:.1f}MB HBM traffic/layer",
-        })
-    dispatcher_comparison(rng, rows)
+def flash_rows(rng, rows):
     for (B, S, H, KV, d) in [(2, 1024, 8, 2, 128), (1, 2048, 4, 4, 64)]:
         q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.bfloat16) * 0.3
         k = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.bfloat16) * 0.3
         v = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.bfloat16) * 0.3
         kb, vb = jnp.repeat(k, H // KV, 2), jnp.repeat(v, H // KV, 2)
         ref = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
-        us = timed(ref, q, kb, vb) * 1e6
+        ref_loss = jax.jit(
+            lambda q, k, v: jnp.sum(jnp.square(flash_attention_ref(q, k, v, causal=True)))
+        )
+        us_fwd = timed(ref, q, kb, vb) * 1e6
+        us_bwd = timed(jax.jit(jax.grad(ref_loss, argnums=(0, 1, 2))), q, kb, vb) * 1e6
         y = flash_attention(q, k, v, causal=True)
-        err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - ref(q, kb, vb).astype(jnp.float32))))
+        err = float(jnp.max(jnp.abs(
+            y.astype(jnp.float32) - ref(q, kb, vb).astype(jnp.float32)
+        )))
         hbm_scores = B * H * S * S * 4 / 1e6
+        # bwd residuals: q,k,v,out (bf16) + lse (f32); autodiff of the dense
+        # ref would also keep the (B,H,S,S) probability matrix
+        lse_bytes = B * H * S * 4
         rows.append({
             "name": f"flash_attn B{B} S{S} H{H} KV{KV} d{d}",
-            "us_per_call_xla_ref": round(us, 1),
+            "us_fwd_xla_ref": round(us_fwd, 1),
+            "us_fwdbwd_xla_ref": round(us_bwd, 1),
             "kernel_max_err": round(err, 5),
-            "derived": f"avoids {hbm_scores:.0f}MB fp32 score materialization",
+            "gemm_rows": B * H * S,
+            "activation_bytes": lse_bytes,
+            "derived": (
+                f"avoids {hbm_scores:.0f}MB fp32 score materialization "
+                f"fwd+bwd; lse residual {lse_bytes/1e3:.0f}KB"
+            ),
         })
-    emit("kernel_bench", rows, list(rows[0]))
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+    expert_gemm_rows(rng, rows)
+    grouped_gemm_rows(rng, rows)
+    dispatcher_comparison(rng, rows)
+    flash_rows(rng, rows)
+    keys = ["name", "us_fwd_xla_ref", "us_fwdbwd_xla_ref", "kernel_max_err",
+            "gemm_rows", "activation_bytes", "derived"]
+    emit("kernel_bench", rows, keys)
+    with open(ROOT_JSON, "w") as f:
+        json.dump({"schema": keys, "rows": rows}, f, indent=1)
+    print(f"# wrote {ROOT_JSON}")
 
 
 if __name__ == "__main__":

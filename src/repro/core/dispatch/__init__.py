@@ -26,6 +26,7 @@ from repro.core.dispatch.allgather import AllGatherDispatcher
 from repro.core.dispatch.alltoall import AllToAllDispatcher
 from repro.core.dispatch.base import (
     DispatchLayout,
+    DispatchState,
     TokenDispatcher,
     capacity,
     dispatch_tables,
@@ -93,6 +94,7 @@ def get_dispatcher(
 __all__ = [
     "DISPATCHERS",
     "DispatchLayout",
+    "DispatchState",
     "TokenDispatcher",
     "AllGatherDispatcher",
     "AllToAllDispatcher",

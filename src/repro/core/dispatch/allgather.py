@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.dispatch.base import (
     DispatchLayout,
+    DispatchState,
     TokenDispatcher,
     capacity,
     dispatch_tables,
@@ -32,14 +33,13 @@ class AllGatherDispatcher(TokenDispatcher):
         super().__init__(cfg, moe, plan)
         self.groups = groups
 
-    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array) -> jax.Array:
+    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array):
         T, D = x.shape
         moe, plan = self.moe, self.plan
         E, k = moe.num_experts, moe.top_k
         G = self.groups
         Tg = T // G
         C = capacity(moe, Tg)
-        self._T, self._Tg, self._C, self._E = T, Tg, C, E
 
         xg = x.reshape(G, Tg, D)
         if moe.router_type == "expert_choice":
@@ -59,21 +59,26 @@ class AllGatherDispatcher(TokenDispatcher):
         xe = jax.vmap(lambda xs, s: xs[s])(xg, sel)  # (G, E, C, D)
         if plan is not None:
             xe = plan.constrain(xe, "batch", "expert", None, None)
-        self._sel, self._slot_gate = sel, slot_gate
-        self.layout = DispatchLayout("padded", E, capacity=C)
-        return xe
+        state = DispatchState(
+            layout=DispatchLayout("padded", E, capacity=C),
+            residuals={"sel": sel, "slot_gate": slot_gate},
+            static={"tokens": T, "tg": Tg},
+        )
+        return xe, state
 
-    def combine(self, ye: jax.Array) -> jax.Array:
+    def combine(self, ye: jax.Array, state) -> jax.Array:
         # scatter-add back to token order; contributions from different
         # expert shards reduce over the EP axis.
-        E, C, Tg, D = self._E, self._C, self._Tg, ye.shape[-1]
-        ye = ye * self._slot_gate[..., None].astype(ye.dtype)
+        r = state.residuals
+        E, C = state.layout.num_experts, state.layout.capacity
+        Tg, D = state.static["tg"], ye.shape[-1]
+        ye = ye * r["slot_gate"][..., None].astype(ye.dtype)
 
         def scatter(y_g, sel_g):
             flat = y_g.reshape(E * C, D)
             return jnp.zeros((Tg, D), flat.dtype).at[sel_g.reshape(E * C)].add(flat)
 
-        out = jax.vmap(scatter)(ye, self._sel)  # (G, Tg, D)
+        out = jax.vmap(scatter)(ye, r["sel"])  # (G, Tg, D)
         if self.plan is not None:
             out = self.plan.constrain(out, "batch", None, None)
-        return out.reshape(self._T, D)
+        return out.reshape(state.static["tokens"], D)

@@ -17,6 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.dispatch.base import (
     DispatchLayout,
+    DispatchState,
     TokenDispatcher,
     capacity,
     dispatch_tables,
@@ -27,30 +28,35 @@ from repro.core.dispatch.base import (
 class AllToAllDispatcher(TokenDispatcher):
     name = "alltoall"
 
-    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array) -> jax.Array:
+    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array, *,
+                 E: int, C: int, ep: int, E_loc: int, ep_axis: str):
         """Local shard view: table build + all_to_all. Called inside the
-        shard_map region set up by ``apply``."""
-        moe = self.moe
-        E, C, ep, E_loc = self._E, self._C, self._ep, self._E_loc
+        shard_map region set up by ``apply`` (which supplies the static
+        shard geometry)."""
         T_loc, D = x.shape
         sel, slot_gate = dispatch_tables(idx, gates, E, C)  # (E, C)
         send = x[sel]  # (E, C, D) outgoing slots, grouped by global expert
         recv = jax.lax.all_to_all(
-            send.reshape(ep, E_loc, C, D), self._ep_axis, split_axis=0, concat_axis=0
+            send.reshape(ep, E_loc, C, D), ep_axis, split_axis=0, concat_axis=0
         )  # (ep, E_loc, C, D): slot block from every sender for my experts
         xe = recv.transpose(1, 0, 2, 3).reshape(E_loc, ep * C, D)
-        self._sel, self._slot_gate, self._T_loc = sel, slot_gate, T_loc
-        self.layout = DispatchLayout("padded", E_loc, capacity=ep * C)
-        return xe
+        state = DispatchState(
+            layout=DispatchLayout("padded", E_loc, capacity=ep * C),
+            residuals={"sel": sel, "slot_gate": slot_gate},
+            static={"tokens": T_loc, "E": E, "C": C, "ep": ep, "ep_axis": ep_axis},
+        )
+        return xe, state
 
-    def combine(self, ye: jax.Array) -> jax.Array:
-        E, C, ep, E_loc = self._E, self._C, self._ep, self._E_loc
+    def combine(self, ye: jax.Array, state) -> jax.Array:
+        r, st = state.residuals, state.static
+        E, C, ep = st["E"], st["C"], st["ep"]
+        E_loc = state.layout.num_experts
         D = ye.shape[-1]
         back = ye.reshape(E_loc, ep, C, D).transpose(1, 0, 2, 3)
-        ret = jax.lax.all_to_all(back, self._ep_axis, split_axis=0, concat_axis=0)
-        ret = ret.reshape(E, C, D) * self._slot_gate[..., None].astype(ye.dtype)
-        return jnp.zeros((self._T_loc, D), ret.dtype).at[
-            self._sel.reshape(E * C)
+        ret = jax.lax.all_to_all(back, st["ep_axis"], split_axis=0, concat_axis=0)
+        ret = ret.reshape(E, C, D) * r["slot_gate"][..., None].astype(ye.dtype)
+        return jnp.zeros((st["tokens"], D), ret.dtype).at[
+            r["sel"].reshape(E * C)
         ].add(ret.reshape(E * C, D))
 
     def apply(
@@ -71,16 +77,17 @@ class AllToAllDispatcher(TokenDispatcher):
         token_axes = tuple(plan.batch_axes) + (ep_axis,)
         shards = int(np.prod([mesh.shape[a] for a in token_axes]))
         assert T % shards == 0, (T, shards)
-        self._ep_axis, self._ep = ep_axis, ep
-        self._E, self._E_loc = E, E // ep
-        self._C = capacity(moe, T // shards)
+        E_loc = E // ep
+        C = capacity(moe, T // shards)
 
         w_specs = jax.tree.map(lambda _: P(ep_axis, None, None), experts)
 
         def local_moe(x_l, gates_l, idx_l, experts_l):
-            xe = self.dispatch(x_l, idx_l, gates_l)
-            ye = expert_ffn(experts_l, xe[None], self.layout, use_kernel)[0]
-            return self.combine(ye)
+            xe, state = self.dispatch(
+                x_l, idx_l, gates_l, E=E, C=C, ep=ep, E_loc=E_loc, ep_axis=ep_axis
+            )
+            ye = expert_ffn(experts_l, xe[None], state.layout, use_kernel)[0]
+            return self.combine(ye, state)
 
         fn = shard_map(
             local_moe,

@@ -4,15 +4,18 @@ dispatch bookkeeping (capacity, table building, group splitting).
 A dispatcher moves routed tokens between the token-major layout the model
 computes in and an expert-major layout the expert kernels consume:
 
-* ``dispatch(x, idx, gates)`` -> expert-major tokens, and records the
-  per-call combine state on the instance (Megatron-style: one dispatcher
-  instance per MoE invocation, created inside the trace).
-* ``combine(ye)``             -> token-major ``(T, D)`` output with the
+* ``dispatch(x, idx, gates)`` -> ``(expert-major tokens, DispatchState)``.
+  The state carries the :class:`DispatchLayout` descriptor the kernel layer
+  consumes (dense padded ``(E, C, D)`` vs. flat expert-sorted ``(N, D)`` +
+  ``group_sizes``) plus the residual arrays combine needs to reverse the
+  permutation.
+* ``combine(ye, state)``      -> token-major ``(T, D)`` output with the
   gate weighting applied.
-* ``layout``                  -> a :class:`DispatchLayout` descriptor the
-  kernel layer consumes — it names the buffer layout (dense padded
-  ``(E, C, D)`` vs. flat expert-sorted ``(N, D)`` + ``group_sizes``) so the
-  expert FFN can pick the matching GEMM.
+
+Dispatchers hold NO mutable per-invocation state: all per-call values flow
+through the returned :class:`DispatchState`, so one instance is re-entrant
+under ``jax.grad`` / ``jax.vmap`` / nested tracing (dispatch twice, combine
+in any order).
 
 Concrete dispatchers live in sibling modules: ``allgather`` (global-view
 pjit), ``alltoall`` (shard_map + lax.all_to_all over the EP axis), and
@@ -54,6 +57,53 @@ class DispatchLayout:
     capacity: Optional[int] = None
     group_sizes: Optional[jax.Array] = None
     row_block: int = 1
+
+
+@dataclasses.dataclass
+class DispatchState:
+    """Per-invocation dispatch residuals, returned by ``dispatch`` and
+    passed back to ``combine``. ``layout`` describes the expert-major
+    buffer for the kernel layer; ``residuals`` holds the arrays the
+    concrete dispatcher needs to reverse its permutation (selection tables,
+    argsort destinations, gate weights, ...); ``static`` holds hashable
+    shape/geometry metadata (token counts, shard factors, axis names).
+    Keeping these out of the dispatcher instance makes dispatch/combine
+    pure functions of their inputs — re-entrant under jax.grad, jax.vmap,
+    and nested traces. Both this class and :class:`DispatchLayout` are
+    registered pytrees (arrays are leaves, everything else aux data), so
+    the state may legally cross jit/vmap/scan boundaries."""
+
+    layout: DispatchLayout
+    residuals: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    static: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _layout_flatten(l: DispatchLayout):
+    return (l.group_sizes,), (l.kind, l.num_experts, l.capacity, l.row_block)
+
+
+def _layout_unflatten(aux, children):
+    kind, num_experts, cap, row_block = aux
+    return DispatchLayout(
+        kind, num_experts, capacity=cap, group_sizes=children[0], row_block=row_block
+    )
+
+
+jax.tree_util.register_pytree_node(DispatchLayout, _layout_flatten, _layout_unflatten)
+
+
+def _state_flatten(s: DispatchState):
+    keys = tuple(sorted(s.residuals))
+    children = (s.layout,) + tuple(s.residuals[k] for k in keys)
+    return children, (keys, tuple(sorted(s.static.items())))
+
+
+def _state_unflatten(aux, children):
+    keys, static_items = aux
+    return DispatchState(children[0], dict(zip(keys, children[1:])), dict(static_items))
+
+
+jax.tree_util.register_pytree_node(DispatchState, _state_flatten, _state_unflatten)
 
 
 # ---------------------------------------------------------------------------
@@ -158,20 +208,23 @@ def expert_ffn(
 
 
 class TokenDispatcher:
-    """One instance per MoE invocation. ``apply`` composes the pipeline
-    dispatch -> expert FFN -> combine; dispatchers that own their collectives
-    (alltoall) override ``apply`` to wrap the pipeline in shard_map."""
+    """Stateless dispatch/combine pair. ``apply`` composes the pipeline
+    dispatch -> expert FFN -> combine, threading the per-call
+    :class:`DispatchState` between the two; dispatchers that own their
+    collectives (alltoall) override ``apply`` to wrap the pipeline in
+    shard_map."""
 
     name = "base"
 
     def __init__(self, cfg: Any, moe: Any, plan: Optional[FoldingPlan]):
         self.cfg, self.moe, self.plan = cfg, moe, plan
-        self.layout: Optional[DispatchLayout] = None
 
-    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array) -> jax.Array:
+    def dispatch(
+        self, x: jax.Array, idx: jax.Array, gates: jax.Array
+    ) -> Tuple[jax.Array, DispatchState]:
         raise NotImplementedError
 
-    def combine(self, ye: jax.Array) -> jax.Array:
+    def combine(self, ye: jax.Array, state: DispatchState) -> jax.Array:
         raise NotImplementedError
 
     def apply(
@@ -182,6 +235,6 @@ class TokenDispatcher:
         idx: jax.Array,
         use_kernel: bool = False,
     ) -> jax.Array:
-        xe = self.dispatch(x, idx, gates)
-        ye = expert_ffn(experts, xe, self.layout, use_kernel)
-        return self.combine(ye)
+        xe, state = self.dispatch(x, idx, gates)
+        ye = expert_ffn(experts, xe, state.layout, use_kernel)
+        return self.combine(ye, state)

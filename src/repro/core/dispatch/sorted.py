@@ -22,7 +22,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.dispatch.base import DispatchLayout, TokenDispatcher, expert_ffn
+from repro.core.dispatch.base import (
+    DispatchLayout,
+    DispatchState,
+    TokenDispatcher,
+    expert_ffn,
+)
 
 # Row-tile alignment of the expert-sorted buffer on the kernel path. This is
 # the single knob: it is threaded to the grouped GEMM as its row-tile size
@@ -42,12 +47,14 @@ def aligned_rows(N: int, E: int, row_block: int) -> int:
 class SortedDispatcher(TokenDispatcher):
     name = "sorted"
 
-    def dispatch(self, x: jax.Array, idx: jax.Array, gates: jax.Array) -> jax.Array:
+    def dispatch(
+        self, x: jax.Array, idx: jax.Array, gates: jax.Array, row_block: int = 1
+    ):
         T, D = x.shape
         E = self.moe.num_experts
         k = idx.shape[-1]
         N = T * k
-        b = self._row_block
+        b = row_block
 
         flat_e = idx.reshape(N)
         # stable argsort: expert-major, token-major within an expert (same
@@ -67,18 +74,24 @@ class SortedDispatcher(TokenDispatcher):
 
         N_pad = aligned_rows(N, E, b)
         xs = jnp.zeros((N_pad, D), x.dtype).at[dest].set(x[token])
-        self._token, self._dest, self._T = token, dest, T
-        self._gate_sorted = gates.reshape(N)[order]
-        self.layout = DispatchLayout(
-            "sorted", E, group_sizes=group_sizes, row_block=b
+        state = DispatchState(
+            layout=DispatchLayout("sorted", E, group_sizes=group_sizes, row_block=b),
+            residuals={
+                "token": token,
+                "dest": dest,
+                "gate_sorted": gates.reshape(N)[order],
+            },
+            static={"tokens": T},
         )
-        return xs
+        return xs, state
 
-    def combine(self, ye: jax.Array) -> jax.Array:
+    def combine(self, ye: jax.Array, state) -> jax.Array:
         D = ye.shape[-1]
-        yv = ye[self._dest]  # (N, D) valid rows back in sorted order
-        yv = yv * self._gate_sorted[:, None].astype(ye.dtype)
-        return jnp.zeros((self._T, D), yv.dtype).at[self._token].add(yv)
+        r = state.residuals
+        yv = ye[r["dest"]]  # (N, D) valid rows back in sorted order
+        yv = yv * r["gate_sorted"][:, None].astype(ye.dtype)
+        T = state.static["tokens"]
+        return jnp.zeros((T, D), yv.dtype).at[r["token"]].add(yv)
 
     def apply(
         self,
@@ -90,7 +103,7 @@ class SortedDispatcher(TokenDispatcher):
     ) -> jax.Array:
         # the kernel tiles rows -> tile-aligned regions; XLA ragged_dot
         # consumes the compact buffer
-        self._row_block = KERNEL_ROW_BLOCK if use_kernel else 1
-        xe = self.dispatch(x, idx, gates)
-        ye = expert_ffn(experts, xe, self.layout, use_kernel)
-        return self.combine(ye)
+        row_block = KERNEL_ROW_BLOCK if use_kernel else 1
+        xe, state = self.dispatch(x, idx, gates, row_block=row_block)
+        ye = expert_ffn(experts, xe, state.layout, use_kernel)
+        return self.combine(ye, state)

@@ -4,8 +4,12 @@ On non-TPU backends (this container) the kernels execute in interpret mode
 — the kernel body runs in Python on CPU for correctness validation; on TPU
 they compile to Mosaic. The dispatch subsystem (``core/dispatch``) calls
 ``expert_gemm`` (padded layout) or ``grouped_gemm`` (sorted layout) when
-``use_kernel=True``; models can call ``flash_attention`` in place of the
-blockwise XLA path.
+``use_kernel=True``; ``models/attention.py`` calls ``flash_attention`` in
+place of the blockwise XLA path. All three are differentiable
+(``jax.custom_vjp`` with hand-written backward Pallas kernels and
+activation recompute — see kernels/expert_gemm.py, kernels/
+flash_attention.py), so ``Trainer(use_kernel=True)`` runs forward AND
+backward on the kernel path.
 """
 from __future__ import annotations
 
@@ -63,8 +67,9 @@ def grouped_gemm_xla(xs, w_gate, w_up, w_down, group_sizes):
 
 def flash_attention(
     q, k, v, causal: bool = True, window: Optional[int] = None,
-    blocks=_fa.DEFAULT_BLOCKS,
+    scale: Optional[float] = None, blocks=_fa.DEFAULT_BLOCKS,
 ):
     return _fa.flash_attention(
-        q, k, v, causal=causal, window=window, blocks=blocks, interpret=_interpret()
+        q, k, v, causal=causal, window=window, scale=scale, blocks=blocks,
+        interpret=_interpret(),
     )

@@ -63,14 +63,27 @@ def attention_core(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     causal: bool = True,
+    use_kernel: bool = False,
 ) -> jax.Array:
     """q: (B,Sq,H,dk) k: (B,Sk,KV,dk) v: (B,Sk,KV,dv); H % KV == 0.
-    q_pos: (B,Sq), k_pos: (B,Sk). Returns (B,Sq,H,dv)."""
+    q_pos: (B,Sq), k_pos: (B,Sk). Returns (B,Sq,H,dv).
+
+    ``use_kernel=True`` routes training/prefill shapes to the Pallas flash
+    kernel (kernels/flash_attention.py), which is differentiable via its
+    custom_vjp — the kernel assumes the contiguous right-aligned positions
+    every full-sequence caller passes, so decode (ring-buffer ``k_pos``)
+    and mismatched head dims fall back to the XLA paths below."""
     B, Sq, H, dk = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     G = H // KV
     dv = v.shape[-1]
     scale = scale if scale is not None else dk**-0.5
+    if use_kernel and Sq == Sk and Sq > 8 and dk == dv:
+        from repro.kernels.ops import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, window=window, scale=float(scale)
+        ).astype(v.dtype)
     qg = q.reshape(B, Sq, KV, G, dk)
 
     # Decode (Sq small): the direct path keeps the KV cache's sequence
@@ -241,6 +254,7 @@ def gqa_apply(
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
     causal: bool = True,
     return_kv: bool = False,
+    use_kernel: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """x: (B,S,D). ``cache``/``cache_view`` set => single-token decode.
     ``cross_kv`` = (k, v, k_pos) precomputed encoder memory (cross-attn).
@@ -272,6 +286,7 @@ def gqa_apply(
         out = attention_core(
             q, k, v, positions, positions,
             cfg.sliding_window if causal else None, causal=causal,
+            use_kernel=use_kernel,
         )
         if return_kv:
             cache = {"k": k, "v": v}
@@ -334,6 +349,7 @@ def mla_apply(
     cache: Optional[Dict[str, jax.Array]] = None,
     cache_view: Optional[Dict[str, jax.Array]] = None,
     return_kv: bool = False,
+    use_kernel: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     m = cfg.mla
     assert m is not None
@@ -366,7 +382,8 @@ def mla_apply(
                 qf = plan.constrain(qf, "fold_batch", "attn_seq", None, None)
                 k = plan.constrain(k, "fold_batch", "attn_seq", None, None)
                 v = plan.constrain(v, "fold_batch", "attn_seq", None, None)
-        out = attention_core(qf, k, v, positions, positions, cfg.sliding_window, scale)
+        out = attention_core(qf, k, v, positions, positions, cfg.sliding_window,
+                             scale, use_kernel=use_kernel)
         out = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
         return out, ({"ckv": ckv, "krope": k_rope} if return_kv else None)
 
@@ -404,8 +421,9 @@ def attention_decl(cfg: ModelConfig) -> Dict[str, Any]:
 
 
 def attention_apply(cfg, plan, params, x, positions, cache=None, cache_view=None,
-                    return_kv=False):
+                    return_kv=False, use_kernel=False):
     if cfg.use_mla:
-        return mla_apply(cfg, plan, params, x, positions, cache, cache_view, return_kv)
+        return mla_apply(cfg, plan, params, x, positions, cache, cache_view,
+                         return_kv, use_kernel=use_kernel)
     return gqa_apply(cfg, plan, params, x, positions, cache, cache_view,
-                     return_kv=return_kv)
+                     return_kv=return_kv, use_kernel=use_kernel)

@@ -115,13 +115,14 @@ def block_apply(
     else:
         if spec.mixer == "attn" and not spec.causal:
             mix, c = gqa_apply(
-                cfg, plan, params["mixer"], h, positions, causal=False
+                cfg, plan, params["mixer"], h, positions, causal=False,
+                use_kernel=use_kernel,
             )
         else:
             mix, c = attention_apply(
                 cfg, plan, params["mixer"], h, positions,
                 cache.get("attn") if cache else None, cache_view,
-                return_kv=return_cache,
+                return_kv=return_cache, use_kernel=use_kernel,
             )
         if c is not None:
             new_cache["attn"] = c

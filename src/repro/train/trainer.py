@@ -135,6 +135,12 @@ class Trainer:
         assert self.data_iter is not None
         n_chips = 1 if self.plan is None else self.plan.mesh.devices.size
         tokens_per_step = self.tcfg.global_batch * self.tcfg.seq_len
+        # MFU accounting: 3x = fwd + bwd (2x) model FLOPs, the paper's (and
+        # Megatron's) convention. Recompute FLOPs are EXCLUDED: the Pallas
+        # backward re-derives the SwiGLU gate/up projections and the flash
+        # probability blocks instead of saving them, so the kernel path does
+        # strictly more arithmetic than 3x — reported MFU is therefore a
+        # slight *under*-estimate there, never inflated by recompute.
         flops_per_step = 3 * self.cfg.flops_per_token(self.tcfg.seq_len) * tokens_per_step
         t0 = time.perf_counter()
         for i in range(steps):

@@ -140,6 +140,230 @@ def test_flash_attention(rng, case, dtype):
     )
 
 
+# ---------------------------------------------------------------------------
+# Gradient parity: jax.grad through the Pallas custom_vjp vs the ref / XLA
+# oracles (interpret mode)
+# ---------------------------------------------------------------------------
+
+EG_GRAD_SHAPES = [  # (E, C, D, F): pow2, non-pow2, single-expert
+    (2, 16, 32, 64),
+    (3, 32, 96, 160),
+    (1, 64, 128, 256),
+]
+
+
+@pytest.mark.parametrize("shape", EG_GRAD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_expert_gemm_grad_parity(rng, shape, dtype):
+    """jax.grad through the padded Pallas kernel == grad of the ref oracle
+    for inputs and all three expert weights."""
+    E, C, D, F = shape
+    xe = jnp.asarray(rng.standard_normal((E, C, D)), dtype) * 0.3
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), dtype) * 0.05
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), dtype) * 0.05
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), dtype) * 0.05
+    r = jnp.asarray(rng.standard_normal((E, C, D)), dtype)
+
+    gk = jax.grad(lambda *a: jnp.sum(expert_gemm(*a) * r), argnums=(0, 1, 2, 3))(
+        xe, wg, wu, wd
+    )
+    gr = jax.grad(lambda *a: jnp.sum(expert_gemm_ref(*a) * r), argnums=(0, 1, 2, 3))(
+        xe, wg, wu, wd
+    )
+    atol = 2e-4 if dtype == jnp.float32 else 5e-2
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=atol
+        )
+
+
+GG_GRAD_CASES = [  # (E, D, F, group_sizes, row_block)
+    (4, 32, 64, (16, 0, 7, 9), 8),  # empty group + ragged tails
+    (2, 64, 128, (128, 128), 128),  # exactly tile-aligned
+    (3, 96, 160, (1, 50, 13), 16),  # non-power-of-two dims
+    (4, 32, 64, (0, 0, 0, 40), 8),  # total imbalance
+]
+
+
+def _grouped_case(rng, E, D, F, gs, bc, dtype):
+    from repro.core.dispatch.sorted import aligned_rows
+
+    gs = np.asarray(gs, np.int32)
+    N_pad = aligned_rows(int(gs.sum()), E, bc)
+    xs = np.full((N_pad, D), 7.5, np.float32)  # poison the padding rows
+    padded = (gs + bc - 1) // bc * bc
+    starts = np.cumsum(padded) - padded
+    for e in range(E):
+        xs[starts[e]:starts[e] + gs[e]] = rng.standard_normal((gs[e], D)) * 0.3
+    xs = jnp.asarray(xs, dtype)
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), dtype) * 0.05
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), dtype) * 0.05
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), dtype) * 0.05
+    return xs, wg, wu, wd, jnp.asarray(gs), N_pad
+
+
+@pytest.mark.parametrize("case", GG_GRAD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_gemm_grad_parity(rng, case, dtype):
+    """jax.grad through the group-size-aware Pallas kernel (dgrad + wgrad +
+    SwiGLU recompute) == grad of the masked-loop ref oracle. Covers empty
+    experts (whose wgrad must be exactly zero) and poisoned padding rows
+    (whose dx must be exactly zero)."""
+    from repro.kernels.ops import grouped_gemm
+    from repro.kernels.ref import grouped_gemm_ref
+
+    E, D, F, gs, bc = case
+    xs, wg, wu, wd, gsj, N_pad = _grouped_case(rng, E, D, F, gs, bc, dtype)
+    r = jnp.asarray(rng.standard_normal((N_pad, D)), dtype)
+
+    gk = jax.grad(
+        lambda *a: jnp.sum(grouped_gemm(*a, gsj, row_block=bc) * r),
+        argnums=(0, 1, 2, 3),
+    )(xs, wg, wu, wd)
+    gr = jax.grad(
+        lambda *a: jnp.sum(grouped_gemm_ref(*a, gsj, row_block=bc) * r),
+        argnums=(0, 1, 2, 3),
+    )(xs, wg, wu, wd)
+    atol = 2e-4 if dtype == jnp.float32 else 5e-2
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=atol
+        )
+    # empty experts: exactly-zero wgrad (their out blocks are never visited)
+    gs_np = np.asarray(gs)
+    for e in np.nonzero(gs_np == 0)[0]:
+        np.testing.assert_array_equal(np.asarray(gk[1], np.float32)[e], 0.0)
+
+
+def test_grouped_gemm_grad_matches_xla_path(rng):
+    """Kernel-path grads == ragged_dot XLA-path grads on the same routing
+    (the two paths Trainer(use_kernel=...) switches between)."""
+    from repro.kernels.ops import grouped_gemm, grouped_gemm_xla
+
+    E, D, F, gs, bc = 4, 32, 64, (16, 0, 7, 9), 8
+    xs, wg, wu, wd, gsj, N_pad = _grouped_case(rng, E, D, F, gs, bc, jnp.float32)
+    # XLA path consumes the compact buffer (row_block=1)
+    gs_np = np.asarray(gs)
+    padded = (gs_np + bc - 1) // bc * bc
+    starts = np.cumsum(padded) - padded
+    keep = np.concatenate(
+        [np.arange(starts[e], starts[e] + gs_np[e]) for e in range(E)]
+    )
+    xc = jnp.asarray(np.asarray(xs)[keep])
+    r = jnp.asarray(rng.standard_normal((N_pad, D)), jnp.float32)
+    rc = jnp.asarray(np.asarray(r)[keep])
+
+    gk = jax.grad(
+        lambda *a: jnp.sum(grouped_gemm(*a, gsj, row_block=bc) * r),
+        argnums=(1, 2, 3),
+    )(xs, wg, wu, wd)
+    gx = jax.grad(
+        lambda *a: jnp.sum(grouped_gemm_xla(*a, gsj) * rc), argnums=(1, 2, 3)
+    )(xc, wg, wu, wd)
+    for a, b in zip(gk, gx):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_grouped_gemm_backward_saves_no_nf_residual(rng):
+    """The recompute contract: the custom_vjp forward saves only the O(N*D)
+    inputs — never an (N, F) gate/up/h intermediate."""
+    from repro.kernels.expert_gemm import grouped_gemm_residuals
+
+    E, D, F, gs, bc = 4, 32, 64, (16, 0, 7, 9), 8
+    xs, wg, wu, wd, gsj, N_pad = _grouped_case(rng, E, D, F, gs, bc, jnp.float32)
+    res = grouped_gemm_residuals(xs, wg, wu, wd, gsj, blocks=(bc, 512, 512))
+    shapes = [tuple(r.shape) for r in res]
+    assert (N_pad, F) not in shapes, shapes
+    # residuals are exactly the inputs
+    assert sorted(shapes) == sorted(
+        [(N_pad, D), (E, D, F), (E, D, F), (E, F, D), (E,)]
+    ), shapes
+
+
+FA_GRAD_CASES = [  # (B, Sq, Sk, H, KV, d, causal, window)
+    (2, 64, 64, 4, 2, 32, True, None),  # GQA causal
+    (1, 32, 128, 4, 4, 64, True, None),  # right-aligned Sq < Sk
+    (2, 128, 128, 8, 2, 32, True, 16),  # sliding window
+    (1, 64, 64, 2, 2, 16, False, None),  # non-causal (encoder)
+]
+
+
+@pytest.mark.parametrize("case", FA_GRAD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_grad_parity(rng, case, dtype):
+    """jax.grad through the two-pass flash backward (p recomputed from the
+    saved logsumexp) == grad of the dense softmax reference."""
+    B, Sq, Sk, H, KV, d, causal, window = case
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, d)), dtype) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, Sk, KV, d)), dtype) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, Sk, KV, d)), dtype) * 0.3
+    r = jnp.asarray(rng.standard_normal((B, Sq, H, d)), dtype)
+    G = H // KV
+
+    def loss_k(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=causal, window=window) * r)
+
+    def loss_r(q, k, v):
+        kb, vb = jnp.repeat(k, G, 2), jnp.repeat(v, G, 2)
+        return jnp.sum(
+            flash_attention_ref(q, kb, vb, causal=causal, window=window) * r
+        )
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    atol = 5e-4 if dtype == jnp.float32 else 6e-2
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=atol
+        )
+
+
+def test_attention_core_kernel_path_grad(rng):
+    """use_kernel=True routes attention_core through the Pallas kernel with
+    matching values AND grads vs the XLA path."""
+    from repro.models.attention import attention_core
+
+    B, S, H, KV, d = 2, 64, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.float32) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    r = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+
+    def loss(q, k, v, uk):
+        return jnp.sum(attention_core(q, k, v, pos, pos, use_kernel=uk) * r)
+
+    y0 = attention_core(q, k, v, pos, pos, use_kernel=False)
+    y1 = attention_core(q, k, v, pos, pos, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-5)
+    g0 = jax.grad(lambda *a: loss(*a, False), argnums=(0, 1, 2))(q, k, v)
+    g1 = jax.grad(lambda *a: loss(*a, True), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g0, g1):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+def test_pick_lane_alignment():
+    """_pick never returns a misaligned tile smaller than the dim: for the
+    lane dims (align=128) it picks the largest multiple-of-128 divisor; the
+    row/sublane dim only needs align=8, so padded capacities like C=192
+    stay legal."""
+    from repro.kernels.expert_gemm import _pick
+
+    assert _pick(512, 384) == 384
+    assert _pick(256, 384) == 128  # old halving loop landed on 96-ish splits
+    assert _pick(512, 640) == 128
+    assert _pick(512, 1536) == 512
+    assert _pick(128, 96) == 96  # non-128-divisible dims: whole-dim tile
+    assert _pick(512, 160) == 160
+    for block, dim in [(512, 384), (128, 256), (512, 640)]:
+        assert _pick(block, dim) % 128 == 0
+    # row dim: sublane alignment preferred, never crashes on odd capacities
+    assert _pick(128, 192, align=8) == 96
+    assert _pick(128, 320, align=8) == 80
+    assert _pick(128, 1, align=8) == 1
+    assert _pick(128, 282, align=8) == 94  # no 8-divisor: largest divisor
+
+
 def test_flash_matches_model_blockwise_path(rng):
     """Kernel vs the model's blockwise XLA attention (same schedule)."""
     from repro.models.attention import attention_core

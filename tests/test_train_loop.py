@@ -77,6 +77,47 @@ def test_trainer_dispatcher_override_matches_explicit_config():
     assert runs[0] == runs[1], runs
 
 
+def test_train_step_use_kernel_sorted():
+    """Full train steps on the Pallas hot path (interpret mode): the sorted
+    dropless dispatcher's grouped GEMM AND flash attention both run under
+    jax.grad via their custom_vjp backward kernels — finite loss/grad-norm,
+    loss moves."""
+    cfg = tiny_dense(num_layers=2, vocab_size=256).replace(
+        family="moe",
+        moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=None,
+                      dispatcher="sorted"),
+    )
+    tcfg = TrainConfig(global_batch=4, seq_len=32, lr=3e-3, lr_min=3e-4,
+                       warmup_steps=2, total_steps=3, log_every=1, seed=3)
+    it = make_train_iter(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch, seed=3)
+    tr = Trainer(cfg, tcfg, data_iter=it, use_kernel=True)
+    tr.run(3, log=lambda *_: None)
+    for rec in tr.history:
+        assert np.isfinite(rec["loss"]), rec
+        assert np.isfinite(rec["grad_norm"]) and rec["grad_norm"] > 0, rec
+    assert tr.history[-1]["loss"] < tr.history[0]["loss"] + 0.1
+
+
+def test_kernel_step_matches_xla_step():
+    """One optimizer step with use_kernel=True vs False from identical
+    init/data: the kernel path is a numerical drop-in for training (same
+    loss to fp tolerance)."""
+    cfg = tiny_dense(num_layers=1, vocab_size=256).replace(
+        family="moe",
+        moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=None,
+                      dispatcher="sorted"),
+    )
+    tcfg = TrainConfig(global_batch=4, seq_len=32, lr=3e-3, lr_min=3e-4,
+                       warmup_steps=2, total_steps=2, log_every=1, seed=3)
+    losses = {}
+    for uk in (False, True):
+        it = make_train_iter(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch, seed=3)
+        tr = Trainer(cfg, tcfg, data_iter=it, use_kernel=uk)
+        tr.run(2, log=lambda *_: None)
+        losses[uk] = [r["loss"] for r in tr.history]
+    np.testing.assert_allclose(losses[False], losses[True], atol=5e-2)
+
+
 def test_upcycled_starts_at_dense_loss():
     """Train dense briefly, upcycle, and check the MoE's first-step CE
     matches the dense model's CE (Mixtral router) — the warm-start claim."""
