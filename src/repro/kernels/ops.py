@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.kernels import expert_gemm as _eg
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 
 
 def _interpret() -> bool:
@@ -71,5 +72,19 @@ def flash_attention(
 ):
     return _fa.flash_attention(
         q, k, v, causal=causal, window=window, scale=scale, blocks=blocks,
+        interpret=_interpret(),
+    )
+
+
+def paged_attention(
+    q, k_pool, v_pool, block_table, seq_lens,
+    window: Optional[int] = None, scale: Optional[float] = None,
+):
+    """Single-token decode against the block-table KV pool: q (B,H,d),
+    pools (num_pages, page_size, KV, d), block_table (B, max_pages) int32
+    (-1 = unassigned), seq_lens (B,). The page gather happens inside the
+    kernel via scalar-prefetched block tables."""
+    return _pa.paged_attention(
+        q, k_pool, v_pool, block_table, seq_lens, window=window, scale=scale,
         interpret=_interpret(),
     )

@@ -51,6 +51,48 @@ def grouped_gemm_ref(
     return out.astype(xs.dtype)
 
 
+def paged_attention_ref(
+    q: jax.Array,  # (B, H, d) one query token per sequence
+    k_pool: jax.Array,  # (num_pages, page_size, KV, d) shared page pool
+    v_pool: jax.Array,  # (num_pages, page_size, KV, d)
+    block_table: jax.Array,  # (B, max_pages) int32 page ids, -1 = unassigned
+    seq_lens: jax.Array,  # (B,) int32 tokens valid per sequence (incl. current)
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """XLA gather oracle for the Pallas paged-attention decode kernel.
+
+    Logical KV slot ``j`` of sequence ``b`` lives at
+    ``pool[block_table[b, j // page_size], j % page_size]`` (identity
+    position mapping — pages never wrap). Slots with ``j >= seq_lens[b]``
+    or an unassigned page are masked. Returns (B, H, d)."""
+    B, H, d = q.shape
+    _, ps, KV, _ = k_pool.shape
+    G = H // KV
+    scale = scale if scale is not None else d**-0.5
+    bt = jnp.maximum(block_table, 0)
+    kg = k_pool[bt].reshape(B, -1, KV, d)  # (B, maxP*ps, KV, d)
+    vg = v_pool[bt].reshape(B, -1, KV, d)
+    S = kg.shape[1]
+    kpos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    valid = (kpos < seq_lens[:, None]) & (block_table >= 0)[
+        :, jnp.arange(S) // ps
+    ]
+    if window is not None:
+        valid &= kpos > (seq_lens[:, None] - 1) - window
+    qg = q.reshape(B, KV, G, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(vg.dtype), vg, preferred_element_type=jnp.float32
+    )
+    # fully-masked sequences (e.g. an idle batch slot) emit zeros, not the
+    # uniform-softmax average of garbage — keeps the kernel parity exact
+    out = jnp.where(valid.any(-1)[:, None, None, None], out, 0.0)
+    return out.reshape(B, H, d).astype(v_pool.dtype)
+
+
 def flash_attention_ref(
     q: jax.Array,  # (B, Sq, H, d)
     k: jax.Array,  # (B, Sk, H, d)  (kv heads pre-broadcast to H)

@@ -1,7 +1,8 @@
 """Serving launcher: batched greedy decoding with the ServingEngine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b --smoke \\
-      --requests 8 --max-new 24
+      --requests 8 --max-new 24 --cache-mode paged --page-size 16 \\
+      --prefill-chunk 32
 """
 from __future__ import annotations
 
@@ -32,6 +33,16 @@ def main(argv=None):
         help="MoE token dispatcher for decode (default: config's choice)",
     )
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument(
+        "--cache-mode", default="ring", choices=["ring", "paged"],
+        help="KV cache backend: dense ring buffer or block-table page pool",
+    )
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (default: ring-capacity parity)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefetched per chunked-prefill step")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -43,7 +54,10 @@ def main(argv=None):
     params = init_from_decls(model_decl(cfg), jax.random.PRNGKey(args.seed))
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_seq=args.prompt_len + args.max_new + 8,
-                           dispatcher=args.dispatcher, use_kernel=args.use_kernel)
+                           dispatcher=args.dispatcher, use_kernel=args.use_kernel,
+                           cache_mode=args.cache_mode, page_size=args.page_size,
+                           num_pages=args.num_pages,
+                           prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
@@ -55,7 +69,13 @@ def main(argv=None):
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in outputs.values())
     print(f"served {len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s, batch={args.max_batch})")
+          f"({total_tokens/dt:.1f} tok/s, batch={args.max_batch}, "
+          f"cache={args.cache_mode})")
+    kv = engine.kv_stats()
+    print(f"  kv peak {kv['kv_bytes_peak']/1e6:.2f} MB"
+          + (f", page util {kv['page_utilization']:.2f}, "
+             f"peak pages {kv['peak_used_pages']}/{kv['num_pages']}"
+             if args.cache_mode == "paged" else ""))
     for rid, out in sorted(outputs.items())[:4]:
         print(f"  req {rid}: {out[:12]}{'...' if len(out) > 12 else ''}")
     return outputs

@@ -1,5 +1,6 @@
 """Attention variants: GQA (llama/qwen/stablelm/jamba), MLA (minicpm3),
-sliding-window, and decode against a ring-buffer KV cache.
+sliding-window, and decode against a ring-buffer OR paged (block-table)
+KV cache.
 
 Two compute paths:
 
@@ -256,7 +257,9 @@ def gqa_apply(
     return_kv: bool = False,
     use_kernel: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
-    """x: (B,S,D). ``cache``/``cache_view`` set => single-token decode.
+    """x: (B,S,D). ``cache``/``cache_view`` set => decode. Two cache views:
+    ring (``slot``/``slot_pos``, S == 1) and paged (``page_table`` et al.,
+    S >= 1 so chunked prefill shares the path — see model.paged_forward).
     ``cross_kv`` = (k, v, k_pos) precomputed encoder memory (cross-attn).
     Returns (out, updated_cache_layer)."""
     B, S, D = x.shape
@@ -290,6 +293,32 @@ def gqa_apply(
         )
         if return_kv:
             cache = {"k": k, "v": v}
+    elif cache_view is not None and "page_table" in cache_view:
+        # ---- paged decode / chunked prefill against the shared page pool --
+        # cache is the pool slice for this layer: (num_pages, ps, KV, hd).
+        # cache_view: page_table (B, maxP); write_page/write_offset (B, S)
+        # physical scatter targets (invalid positions -> the trash page);
+        # k_pos (B, maxP*ps) logical slot validity; seq_lens (B,).
+        wp, wo = cache_view["write_page"], cache_view["write_offset"]
+        k_cache = cache["k"].at[wp, wo].set(k)
+        v_cache = cache["v"].at[wp, wo].set(v)
+        if use_kernel and S == 1:
+            from repro.kernels.ops import paged_attention
+
+            out = paged_attention(
+                q[:, 0], k_cache, v_cache, cache_view["page_table"],
+                cache_view["seq_lens"], window=cfg.sliding_window,
+            )[:, None]
+        else:
+            KVh, hd = k_cache.shape[2], k_cache.shape[3]
+            bt = jnp.maximum(cache_view["page_table"], 0)
+            kg = k_cache[bt].reshape(B, -1, KVh, hd)
+            vg = v_cache[bt].reshape(B, -1, KVh, hd)
+            out = attention_core(
+                q, kg, vg, positions, cache_view["k_pos"], cfg.sliding_window
+            )
+        cache = {"k": k_cache, "v": v_cache}
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
     else:
         assert S == 1 and cache_view is not None
         slot = cache_view["slot"]  # (B,) int32 — ring-buffer write index

@@ -3,7 +3,9 @@ points used by the launcher and dry-run:
 
 * ``forward``     — training/prefill forward over full sequences.
 * ``loss_fn``     — CE over the (padded, vocab-sharded) logits + MoE aux.
-* ``decode_step`` — one new token against the KV/SSM cache (serve_step).
+* ``decode_step`` — one new token against the ring KV/SSM cache (serve_step).
+* ``paged_forward`` / ``decode_step_paged`` — chunked prefill and decode
+  against the block-table page pool (serving cache_mode="paged").
 
 Multimodal stubs (DESIGN.md carve-out): ``vlm`` consumes a precomputed patch
 -embedding prefix; ``encdec`` (audio) consumes precomputed frame embeddings
@@ -191,6 +193,125 @@ def decode_step(
     return logits, new_cache
 
 
+# ---------------------------------------------------------------------------
+# Paged-KV decode / chunked prefill (serving/kv_cache.py drives these)
+# ---------------------------------------------------------------------------
+
+
+def paged_stack_decl(cfg: ModelConfig, num_pages: int, page_size: int) -> Dict[str, Any]:
+    """KV page-pool declarations: per layer-slot ``(P, num_pages, page_size,
+    KV, hd)`` k/v pools shared by every sequence. By convention the LAST
+    page (index ``num_pages - 1``) is the trash page — padded positions
+    scatter there and it never appears in a block table; callers allocating
+    N usable pages must decl N + 1.
+
+    Paged mode covers GQA attention stacks only (dense / moe / vlm-as-text
+    families); MLA, SSM and cross-attention configs keep the ring cache."""
+    slots = build_slots(cfg)
+    periods = periods_for(cfg, slots)
+    assert not cfg.use_mla and all(
+        s.mixer == "attn" and not s.cross_attn for s in slots
+    ), "paged KV cache supports GQA attention stacks only"
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+
+    def pool():
+        return {
+            "attn": {
+                "k": ParamDecl(
+                    (periods, num_pages, page_size, kv, hd),
+                    ("layers", None, None, None, None), "zeros", dt,
+                ),
+                "v": ParamDecl(
+                    (periods, num_pages, page_size, kv, hd),
+                    ("layers", None, None, None, None), "zeros", dt,
+                ),
+            }
+        }
+
+    return {"stack": {f"slot{i}": pool() for i in range(len(slots))}}
+
+
+def paged_forward(
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan],
+    params,
+    pool: Dict[str, Any],
+    tokens: jax.Array,  # (B, S) chunk of token ids (right-padded per bucket)
+    pos_start: jax.Array,  # (B,) absolute position of tokens[:, 0]
+    page_table: jax.Array,  # (B, max_pages) int32 page ids, -1 = unassigned
+    valid_len: jax.Array,  # (B,) real tokens in this chunk (0 = idle slot)
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One forward over the page-table cache view: S > 1 is a prefill chunk
+    (attends to previously-written pages + the chunk itself, causally),
+    S == 1 is single-token decode. Logical KV slot ``j`` of sequence ``b``
+    lives at ``pool[page_table[b, j // ps], j % ps]`` — the identity
+    position mapping (pages never wrap, unlike the ring cache).
+
+    Writes for padded / idle positions are routed to the trash page, so the
+    compiled step is shared across every request in a length bucket.
+    Returns (fp32 logits (B, padded_vocab) at each row's last valid
+    position, updated pool)."""
+    B, S = tokens.shape
+    leaf = jax.tree.leaves(pool["stack"])[0]  # (P, num_pages, ps, KV, hd)
+    num_pages, ps = leaf.shape[1], leaf.shape[2]
+    maxP = page_table.shape[1]
+    trash = num_pages - 1
+
+    positions = pos_start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    pvalid = jnp.arange(S, dtype=jnp.int32)[None, :] < valid_len[:, None]
+    wp = jnp.take_along_axis(page_table, positions // ps, axis=1)  # (B, S)
+    wp = jnp.where(pvalid & (wp >= 0), wp, trash)
+    wo = positions % ps
+    seq_lens = pos_start + valid_len
+    kpos = jnp.arange(maxP * ps, dtype=jnp.int32)
+    k_pos = jnp.where(
+        (kpos[None, :] < seq_lens[:, None]) & (page_table[:, kpos // ps] >= 0),
+        kpos[None, :], -1,
+    )
+    cache_view = {
+        "page_table": page_table, "k_pos": k_pos,
+        "write_page": wp, "write_offset": wo, "seq_lens": seq_lens,
+    }
+
+    x = embed_apply(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    if plan is not None:
+        x = plan.constrain(x, "batch", None, None)
+    slots = build_slots(cfg)
+    x, new_stack, _ = stack_apply(
+        cfg, plan, slots, params["stack"], x, positions,
+        cache=pool["stack"], cache_view=cache_view, use_kernel=use_kernel,
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    last = jnp.maximum(valid_len - 1, 0)
+    xl = x[jnp.arange(B), last][:, None]  # (B, 1, D)
+    logits = unembed_apply(params["embed"], xl)[:, 0]
+    if plan is not None:
+        logits = plan.constrain(logits, "batch", "vocab")
+    return logits, {"stack": new_stack}
+
+
+def decode_step_paged(
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan],
+    params,
+    pool: Dict[str, Any],
+    tokens: jax.Array,  # (B,) next input token ids
+    pos: jax.Array,  # (B,) absolute position to write
+    page_table: jax.Array,  # (B, max_pages)
+    active: jax.Array,  # (B,) 1 for live slots, 0 for idle
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Single-token paged decode: ``paged_forward`` with a length-1 chunk.
+    Idle slots write to the trash page and emit garbage logits (ignored by
+    the engine)."""
+    return paged_forward(
+        cfg, plan, params, pool, tokens[:, None], pos, page_table,
+        active.astype(jnp.int32), use_kernel=use_kernel,
+    )
+
+
 def prefill_forward(
     cfg: ModelConfig,
     plan: Optional[FoldingPlan],
@@ -198,10 +319,18 @@ def prefill_forward(
     batch: Dict[str, jax.Array],
     cache_len: Optional[int] = None,
     use_kernel: bool = False,
+    valid_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Fused prefill: one full-sequence forward that also emits a decode-
     ready cache (prefill_32k lowers this). For sliding-window configs the
-    last W keys are ring-packed into their slots."""
+    last W keys are ring-packed into their slots.
+
+    ``valid_len`` (B,) enables length-bucketed prefill: tokens are
+    right-padded to a shared bucket shape, logits are taken at each row's
+    last *valid* position, and the pad slots are marked invalid in
+    ``slot_pos`` (decode then overwrites them in order). Callers must keep
+    the padded length <= the ring size so padding never wraps over valid
+    entries."""
     tokens = batch["tokens"]
     B, St = tokens.shape
     dtype = jnp.dtype(cfg.dtype)
@@ -225,7 +354,13 @@ def prefill_forward(
         cross_ctx=cross_ctx, use_kernel=use_kernel, return_cache=True,
     )
     x = norm_apply(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
-    logits = unembed_apply(params["embed"], x[:, -1:])[:, 0]
+    if valid_len is None:
+        total = jnp.full((B,), S, jnp.int32)
+        xl = x[:, -1:]
+    else:
+        total = prefix + valid_len.astype(jnp.int32)
+        xl = x[jnp.arange(B), total - 1][:, None]
+    logits = unembed_apply(params["embed"], xl)[:, 0]
 
     # ---- pack the per-layer seq caches into the ring-buffer layout -------
     W = cache_len or S
@@ -261,8 +396,11 @@ def prefill_forward(
     slot_pos = slot_pos.at[:, ring_slots].set(
         jnp.broadcast_to(jnp.arange(S - Wc, S, dtype=jnp.int32), (B, Wc))
     )
+    if valid_len is not None:
+        # pad slots stay invalid; decode overwrites them position-in-order
+        slot_pos = jnp.where(slot_pos >= total[:, None], -1, slot_pos)
     cache = {
-        "pos": jnp.full((B,), S, jnp.int32),
+        "pos": total,
         "slot_pos": slot_pos,
         "stack": stack_cache,
     }

@@ -1,1 +1,6 @@
-from repro.serving.engine import ServingEngine  # noqa: F401
+"""Serving subsystem: continuous-batching engine with ring-buffer and
+paged-KV (block-table) cache backends — see engine.py, kv_cache.py,
+scheduler.py."""
+from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.kv_cache import PagePool  # noqa: F401
+from repro.serving.scheduler import ChunkedScheduler, SchedulerConfig  # noqa: F401

@@ -1,15 +1,27 @@
-"""Batched serving engine: continuous-batching-style request handling on top
-of the fused prefill + single-token decode steps.
+"""Batched serving engine: continuous-batching request handling with two
+interchangeable KV cache backends.
 
-Requests arrive with a prompt; the engine packs up to ``max_batch`` active
-requests into one fixed-shape decode batch (static shapes => one compiled
-decode_step). Slots free as requests hit max_new_tokens or EOS and are
-refilled from the queue — a minimal vLLM-style scheduler without paged KV
-(the ring-buffer cache covers the sliding-window configs).
+* ``cache_mode="ring"`` — the original dense ring-buffer cache: one
+  ``max_batch x max_seq`` KV slab regardless of prompt length, fused
+  single-request prefill spliced into the batch cache. Kept as the parity
+  oracle for the paged path; prefill is compiled once per padded
+  prompt-length bucket (see ``prefill_traces``).
+* ``cache_mode="paged"`` — the block-table subsystem: a shared page pool
+  (``serving/kv_cache.py``), a chunked-prefill continuous-batching
+  scheduler with free-page admission and preemption-by-recompute
+  (``serving/scheduler.py``), and decode through the page-table cache view
+  (``models.model.decode_step_paged`` — Pallas paged-attention kernel when
+  ``use_kernel=True``). Exactly three compiled steps serve every request
+  mix: one prefill chunk (static chunk length, right-padded), one batched
+  decode, regardless of prompt lengths.
+
+Greedy decode over both backends is token-for-token identical — pinned by
+``tests/test_serving_paged.py``.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 import jax
@@ -17,7 +29,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, with_dispatcher
-from repro.models.model import cache_decl, decode_step, prefill_forward
+from repro.models.model import (
+    cache_decl,
+    decode_step,
+    decode_step_paged,
+    paged_forward,
+    prefill_forward,
+)
+from repro.serving.kv_cache import (
+    PagePool,
+    init_paged_pool,
+    kv_bytes_resident,
+    permute_pool,
+    ring_kv_bytes,
+)
+from repro.serving.scheduler import ChunkedScheduler, SchedulerConfig
 from repro.sharding.rules import FoldingPlan, ParamDecl
 
 
@@ -42,17 +68,28 @@ class ServingEngine:
         greedy: bool = True,
         dispatcher: Optional[str] = None,
         use_kernel: bool = False,
+        cache_mode: str = "ring",
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        prefill_chunk: int = 32,
+        watermark: int = 0,
     ):
         # MoE decode runs through the same dispatch subsystem as training;
         # `dispatcher` overrides the config's token dispatcher (e.g. "sorted"
-        # for dropless decode), `use_kernel` enables the Pallas expert GEMMs.
+        # for dropless decode), `use_kernel` enables the Pallas expert GEMMs
+        # and (paged mode) the paged-attention decode kernel.
+        assert cache_mode in ("ring", "paged"), cache_mode
         cfg = with_dispatcher(cfg, dispatcher)
         self.cfg, self.params, self.plan = cfg, params, plan
         self.max_batch, self.max_seq = max_batch, max_seq
         self.greedy = greedy
         self.use_kernel = use_kernel
+        self.cache_mode = cache_mode
         W = max_seq if cfg.sliding_window is None else min(max_seq, cfg.sliding_window)
         self.cache_len = W
+        if cache_mode == "paged":
+            self._init_paged(page_size, num_pages, prefill_chunk, watermark)
+            return
         decls = cache_decl(cfg, max_batch, max_seq)
         self.cache = jax.tree.map(
             lambda d: jnp.zeros(d.shape, d.dtype), decls,
@@ -65,21 +102,88 @@ class ServingEngine:
             lambda p, c, t: decode_step(cfg, plan, p, c, t, use_kernel=self.use_kernel)
         )
         self._next_tok = jnp.zeros((max_batch,), jnp.int32)
+        # prefill compiles once per padded prompt-length bucket, not per
+        # request; `prefill_traces` counts actual traces (regression-tested)
+        self._prefill_fns: Dict[int, object] = {}
+        self.prefill_traces = 0
+
+    # -- paged backend setup ------------------------------------------------
+    def _init_paged(self, page_size, num_pages, prefill_chunk, watermark):
+        cfg = self.cfg
+        maxP = math.ceil(self.max_seq / page_size)
+        if num_pages is None:
+            # capacity parity with the ring cache; the memory win is that
+            # only *allocated* pages count as resident
+            num_pages = self.max_batch * maxP
+        self.page_size, self.num_pages = page_size, num_pages
+        self.prefill_chunk = prefill_chunk
+        self.pool_dev = init_paged_pool(cfg, num_pages, page_size)
+        self.page_pool = PagePool(num_pages, page_size)
+        self.sched = ChunkedScheduler(
+            SchedulerConfig(
+                max_batch=self.max_batch, page_size=page_size,
+                prefill_chunk=prefill_chunk, max_pages_per_seq=maxP,
+                watermark=watermark, window=cfg.sliding_window,
+            ),
+            self.page_pool,
+        )
+        self._rid2req: Dict[int, Request] = {}
+        self._next_np = np.zeros((self.max_batch,), np.int32)
+        self.peak_used_pages = 0
+        # the pool operand is donated (as dryrun donates the decode cache):
+        # the scatter updates in place instead of materializing a second
+        # full-size pool every step
+        self._chunk_fn = jax.jit(
+            lambda p, pool, t, s, bt, vl: paged_forward(
+                cfg, self.plan, p, pool, t, s, bt, vl,
+                use_kernel=self.use_kernel,
+            ),
+            donate_argnums=(1,),
+        )
+        self._decode_paged = jax.jit(
+            lambda p, pool, t, pos, bt, a: decode_step_paged(
+                cfg, self.plan, p, pool, t, pos, bt, a,
+                use_kernel=self.use_kernel,
+            ),
+            donate_argnums=(1,),
+        )
 
     # -- request management -------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        if self.cache_mode == "paged":
+            self._rid2req[req.rid] = req
+            self.sched.submit(req.rid, len(req.prompt), req.max_new_tokens)
+        else:
+            self.queue.append(req)
+
+    def _bucket(self, L: int) -> int:
+        """Padded prefill length for a prompt of L tokens. Sliding-window
+        rings prefill exactly (padding could wrap over valid entries);
+        otherwise the next power of two (>=16), capped at the ring size."""
+        if self.cfg.sliding_window is not None or L >= self.cache_len:
+            return L
+        return min(1 << max(L - 1, 15).bit_length(), self.cache_len)
 
     def _prefill_into_slot(self, slot: int, req: Request) -> None:
         """Run a single-request prefill and splice its cache into the batch
-        cache at ``slot``."""
-        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
-        logits, rc = jax.jit(
-            lambda p, b: prefill_forward(
-                self.cfg, self.plan, p, b, cache_len=self.cache_len,
-                use_kernel=self.use_kernel,
-            )
-        )(self.params, batch)
+        cache at ``slot``. Compiled once per prompt-length bucket."""
+        L = len(req.prompt)
+        b = self._bucket(L)
+        fn = self._prefill_fns.get(b)
+        if fn is None:
+            def traced(p, batch, vl):
+                self.prefill_traces += 1  # fires at trace time only
+                return prefill_forward(
+                    self.cfg, self.plan, p, batch, cache_len=self.cache_len,
+                    use_kernel=self.use_kernel, valid_len=vl,
+                )
+
+            fn = jax.jit(traced)
+            self._prefill_fns[b] = fn
+        toks = np.zeros((1, b), np.int32)
+        toks[0, :L] = req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, rc = fn(self.params, batch, jnp.asarray([L], jnp.int32))
 
         def splice(dst, src):
             if dst.ndim >= 3 and dst.shape[1] == self.max_batch:  # stacked (P,B,...)
@@ -101,8 +205,12 @@ class ServingEngine:
 
     # -- main loop ----------------------------------------------------------
     def step(self) -> int:
-        """One batched decode step across all active slots. Returns the
-        number of active requests."""
+        """One engine step. Returns the number of active requests."""
+        if self.cache_mode == "paged":
+            return self._step_paged()
+        return self._step_ring()
+
+    def _step_ring(self) -> int:
         self._fill_free_slots()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
@@ -111,21 +219,111 @@ class ServingEngine:
         toks = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
         self._next_tok = toks.astype(jnp.int32)
         for i in active:
-            req = self.slots[i]
-            tok = int(toks[i])
-            req.output.append(tok)
-            if len(req.output) >= req.max_new_tokens or (
-                req.eos_id is not None and tok == req.eos_id
-            ):
-                req.done = True
+            if self._emit(self.slots[i], int(toks[i])):
                 self.slots[i] = None
         return len(active)
+
+    def _emit(self, req: Request, tok: int) -> bool:
+        """Append a generated token; True if the request just finished."""
+        req.output.append(tok)
+        done = len(req.output) >= req.max_new_tokens or (
+            req.eos_id is not None and tok == req.eos_id
+        )
+        req.done = req.done or done
+        return done
+
+    def _step_paged(self) -> int:
+        plan = self.sched.plan()
+        # sample the peak right after planning (allocation) — on_token below
+        # may free a finished request's pages within the same step
+        self.peak_used_pages = max(self.peak_used_pages, self.page_pool.used_pages)
+        n_active = len(self.sched.running)
+        for c in plan.prefills:
+            req = self._rid2req[c.rid]
+            # after preemption the generated tokens are prompt suffix
+            full = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.output, np.int32)]
+            )
+            toks = np.zeros((1, self.prefill_chunk), np.int32)
+            toks[0, : c.length] = full[c.start : c.start + c.length]
+            bt = jnp.asarray(self.sched.block_table(c.slot)[None], jnp.int32)
+            logits, self.pool_dev = self._chunk_fn(
+                self.params, self.pool_dev, jnp.asarray(toks),
+                jnp.asarray([c.start], jnp.int32), bt,
+                jnp.asarray([c.length], jnp.int32),
+            )
+            if c.final:
+                tok = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
+                self._next_np[c.slot] = tok
+                self.sched.on_token(c.slot, self._emit(req, tok))
+        if plan.decode_slots:
+            active = np.zeros((self.max_batch,), np.int32)
+            pos = np.zeros((self.max_batch,), np.int32)
+            for slot in plan.decode_slots:
+                r = self.sched.running[slot]
+                active[slot] = 1
+                pos[slot] = r.decode_pos  # cache position this step writes
+            bt = jnp.asarray(self.sched.tables, jnp.int32)
+            logits, self.pool_dev = self._decode_paged(
+                self.params, self.pool_dev, jnp.asarray(self._next_np),
+                jnp.asarray(pos), bt, jnp.asarray(active),
+            )
+            toks = np.asarray(
+                jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1), np.int32
+            )
+            for slot in plan.decode_slots:
+                req = self._rid2req[self.sched.running[slot].rid]
+                tok = int(toks[slot])
+                self._next_np[slot] = tok
+                self.sched.on_token(slot, self._emit(req, tok))
+        return n_active
 
     def run(self, requests: List[Request], max_steps: int = 10_000) -> Dict[int, List[int]]:
         for r in requests:
             self.submit(r)
         steps = 0
-        while (any(self.slots) or self.queue) and steps < max_steps:
+        while steps < max_steps:
+            if self.cache_mode == "paged":
+                if not self.sched.has_work:
+                    break
+            elif not (any(self.slots) or self.queue):
+                break
             self.step()
             steps += 1
         return {r.rid: r.output for r in requests}
+
+    # -- paged utilities ----------------------------------------------------
+    def defrag(self) -> bool:
+        """Compact the page pool (paged mode): permutes the device pool and
+        rewrites every block table. Returns True if anything moved."""
+        assert self.cache_mode == "paged"
+        mapping = self.page_pool.defrag()
+        if not mapping:
+            return False
+        self.sched.apply_defrag(mapping)
+        self.pool_dev = permute_pool(self.pool_dev, mapping)
+        return True
+
+    def kv_stats(self) -> Dict[str, float]:
+        """Resident-KV accounting for the bench (both modes)."""
+        if self.cache_mode == "paged":
+            from repro.serving.kv_cache import kv_page_bytes
+
+            page_bytes = kv_page_bytes(self.cfg, self.page_size)
+            return {
+                "kv_bytes_resident": kv_bytes_resident(self.cfg, self.page_pool),
+                "kv_bytes_peak": self.peak_used_pages * page_bytes,
+                "page_utilization": self.page_pool.utilization(),
+                "peak_used_pages": self.peak_used_pages,
+                "num_pages": self.num_pages,
+            }
+        return {
+            "kv_bytes_resident": ring_kv_bytes(
+                self.cfg, self.max_batch, self.cache_len
+            ),
+            "kv_bytes_peak": ring_kv_bytes(self.cfg, self.max_batch, self.cache_len),
+            "page_utilization": 1.0,
+            "peak_used_pages": 0,
+            "num_pages": 0,
+        }

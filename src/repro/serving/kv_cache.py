@@ -1,0 +1,164 @@
+"""Block-table KV cache: a fixed-size page pool shared by every sequence.
+
+The device side is a per-layer ``(num_pages + 1, page_size, KV, hd)`` k/v
+pool (``models.model.paged_stack_decl``; the extra page is the trash page
+padded positions scatter into). The host side is :class:`PagePool` — a
+free-list allocator tracking which physical pages each request owns — plus
+per-slot block tables mapping logical page index -> physical page.
+
+Logical KV slot ``j`` of a request maps to
+``pool[table[j // page_size], j % page_size]``: the identity position
+mapping. Unlike the ring buffer, pages never wrap; a sliding-window config
+instead *releases* pages that fall entirely below the window (the window
+mask already excludes them, so the tokens are dead).
+
+Memory accounting (``kv_bytes_resident``) counts only pages actually
+allocated to live requests — the number the serving bench compares against
+the ring cache's ``max_batch * max_seq`` dense footprint.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.model import paged_stack_decl
+from repro.sharding.rules import ParamDecl
+
+
+class PagePool:
+    """Host-side allocator over ``num_pages`` usable pages.
+
+    Invariants (asserted by :meth:`check_invariants` and exercised by the
+    property suite): every page is either free or owned by exactly one
+    request; ``free_pages + sum(owned) == num_pages`` at all times; a
+    drained pool is fully free."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages > 0 and page_size > 0
+        self.num_pages, self.page_size = num_pages, page_size
+        # stack with low ids on top so allocation order is deterministic
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._owned: Dict[int, List[int]] = {}
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` KV entries."""
+        return math.ceil(tokens / self.page_size)
+
+    def owned(self, rid: int) -> List[int]:
+        return list(self._owned.get(rid, ()))
+
+    def utilization(self) -> float:
+        return self.used_pages / self.num_pages
+
+    # -- mutation -----------------------------------------------------------
+    def alloc(self, rid: int, n: int = 1) -> Optional[List[int]]:
+        """Allocate ``n`` pages for ``rid``; None (no partial effect) if the
+        pool cannot satisfy the request."""
+        if n < 0 or n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(rid, []).extend(pages)
+        return pages
+
+    def release(self, rid: int, pages: List[int]) -> None:
+        """Return specific pages owned by ``rid`` (dead sliding-window
+        pages) to the free list."""
+        owned = self._owned.get(rid, [])
+        for p in pages:
+            owned.remove(p)  # raises if not owned — double-free is a bug
+            self._free.append(p)
+        if not owned and rid in self._owned:
+            del self._owned[rid]
+
+    def free_request(self, rid: int) -> int:
+        """Free every page owned by ``rid``; returns how many."""
+        pages = self._owned.pop(rid, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    def defrag(self) -> Optional[Dict[int, int]]:
+        """Compact allocated pages into the low-index prefix. Returns the
+        {old_physical: new_physical} mapping (None if already compact); the
+        caller must apply it to the device pool (:func:`permute_pool`) and
+        every block table in the same step."""
+        allocated = sorted(p for pages in self._owned.values() for p in pages)
+        mapping = {old: new for new, old in enumerate(allocated) if old != new}
+        if not mapping:
+            return None
+        remap = {old: new for new, old in enumerate(allocated)}
+        for pages in self._owned.values():
+            pages[:] = [remap.get(p, p) for p in pages]
+        n = len(allocated)
+        self._free = list(range(self.num_pages - 1, n - 1, -1))
+        return mapping
+
+    # -- invariants ---------------------------------------------------------
+    def check_invariants(self) -> None:
+        owned = [p for pages in self._owned.values() for p in pages]
+        assert len(owned) == len(set(owned)), "page double-assigned"
+        assert not set(owned) & set(self._free), "page both owned and free"
+        assert len(owned) + len(self._free) == self.num_pages, "page leaked"
+        assert all(0 <= p < self.num_pages for p in owned + self._free)
+
+
+def init_paged_pool(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Zero-initialized device page pool with ``num_pages`` usable pages
+    (+1 trash page at the end, per the ``paged_stack_decl`` convention)."""
+    decls = paged_stack_decl(cfg, num_pages + 1, page_size)
+    return jax.tree.map(
+        lambda d: jnp.zeros(d.shape, d.dtype), decls,
+        is_leaf=lambda d: isinstance(d, ParamDecl),
+    )
+
+
+def permute_pool(pool, mapping: Dict[int, int]):
+    """Apply a defrag mapping to the device pool: page ``old`` moves to
+    index ``new``. Leaves are (P, num_pages, ps, KV, hd); the trash page is
+    never remapped."""
+    n = jax.tree.leaves(pool)[0].shape[1]
+    src = np.arange(n)
+    for old, new in mapping.items():
+        src[new] = old
+    idx = jnp.asarray(src)
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=1), pool)
+
+
+def kv_page_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """Bytes one allocated page pins across the whole stack (k + v, every
+    layer)."""
+    from repro.models.transformer import build_slots, periods_for
+
+    slots = build_slots(cfg)
+    periods = periods_for(cfg, slots)
+    per_entry = cfg.num_kv_heads * cfg.head_dim_ * jnp.dtype(cfg.dtype).itemsize
+    return 2 * periods * len(slots) * page_size * per_entry
+
+
+def kv_bytes_resident(cfg: ModelConfig, pool: PagePool) -> int:
+    """KV bytes pinned by live requests (the paged-mode resident set)."""
+    return pool.used_pages * kv_page_bytes(cfg, pool.page_size)
+
+
+def ring_kv_bytes(cfg: ModelConfig, max_batch: int, cache_len: int) -> int:
+    """Resident KV bytes of the dense ring cache at the same batch — it
+    allocates ``max_batch * cache_len`` entries regardless of occupancy."""
+    from repro.models.transformer import build_slots, periods_for
+
+    slots = build_slots(cfg)
+    periods = periods_for(cfg, slots)
+    per_entry = cfg.num_kv_heads * cfg.head_dim_ * jnp.dtype(cfg.dtype).itemsize
+    return 2 * periods * len(slots) * max_batch * cache_len * per_entry

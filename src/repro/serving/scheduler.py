@@ -1,0 +1,301 @@
+"""Continuous-batching scheduler with chunked prefill over a page pool.
+
+Policy layer only — no model, no device arrays — so the property suite can
+drive it with simulated token streams. Each :meth:`ChunkedScheduler.plan`
+call produces one engine step:
+
+* **admission**: FIFO from the queue into free batch slots, gated by the
+  free-page budget (a request is admitted only if its whole prompt fits,
+  plus ``watermark`` reserve pages — chunked prefill then spreads the
+  actual allocation over several steps).
+* **chunked prefill**: each prefilling slot contributes at most
+  ``prefill_chunk`` prompt tokens per step, so a long prompt interleaves
+  with decode instead of stalling the batch. The chunk length is static
+  (the last chunk is right-padded), so ONE compiled prefill step serves
+  every chunk of every request.
+* **decode**: every slot whose prompt is fully prefilled decodes one token.
+* **preemption**: when the pool cannot supply a page, the *youngest*
+  running request is evicted (pages freed, requeued at the front for
+  recompute — its generated tokens become prompt suffix). Victims are
+  always strictly younger than the request that needs the page, so the
+  oldest request always makes progress and every submitted request
+  terminates (provided the pool can hold one maximal request — enforced at
+  ``submit``).
+* **sliding window**: with ``window`` set, pages that fall entirely below
+  the window of every future query are released immediately — the window
+  mask already excludes them, so paged decode holds O(window) KV per
+  request where the full-context mapping would hold O(position).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.kv_cache import PagePool
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int
+    page_size: int
+    prefill_chunk: int
+    max_pages_per_seq: int
+    watermark: int = 0  # free pages kept in reserve at admission
+    window: Optional[int] = None  # sliding window: release dead pages
+
+
+@dataclasses.dataclass
+class SchedRequest:
+    rid: int
+    prompt_len: int  # current prompt (grows by generated tokens on preempt)
+    max_new_tokens: int
+    orig_prompt_len: int = 0
+    admit_seq: int = -1  # admission order; -1 = never admitted
+    slot: int = -1
+    prefilled: int = 0  # prompt tokens already in the cache
+    generated: int = 0  # output tokens emitted (across preemptions)
+    gen_base: int = 0  # outputs folded into prompt_len by preemption
+    logical_pages: int = 0  # logical pages ever allocated (monotone)
+    preemptions: int = 0
+    done: bool = False
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.prefilled < self.prompt_len
+
+    @property
+    def decode_pos(self) -> int:
+        """Cache position the next decode step writes: the prompt plus the
+        outputs emitted since the last (re)prefill, minus the one output
+        that has not been fed back yet."""
+        return self.prompt_len + (self.generated - self.gen_base) - 1
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    rid: int
+    slot: int
+    start: int  # offset into the request's current full token list
+    length: int  # real tokens this chunk (<= prefill_chunk)
+    final: bool  # True => chunk logits emit the first/next output token
+
+
+@dataclasses.dataclass
+class StepPlan:
+    prefills: List[PrefillChunk]
+    decode_slots: List[int]
+    preempted: List[int]  # rids evicted while building this plan
+
+
+class ChunkedScheduler:
+    def __init__(self, cfg: SchedulerConfig, pool: PagePool):
+        assert pool.page_size == cfg.page_size
+        self.cfg = cfg
+        self.pool = pool
+        self.queue: Deque[SchedRequest] = deque()
+        self.running: Dict[int, SchedRequest] = {}  # slot -> request
+        self.requests: Dict[int, SchedRequest] = {}  # rid -> request
+        self.tables = np.full((cfg.max_batch, cfg.max_pages_per_seq), -1, np.int64)
+        self._admit_counter = 0
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, rid: int, prompt_len: int, max_new_tokens: int) -> None:
+        total = prompt_len + max_new_tokens
+        need = self.pool.pages_for(total)
+        if need > self.cfg.max_pages_per_seq:
+            raise ValueError(
+                f"request {rid}: {total} tokens need {need} pages "
+                f"> max_pages_per_seq={self.cfg.max_pages_per_seq}"
+            )
+        # with a sliding window dead pages are released as decode advances,
+        # so the live set is bounded by the window span, not the total
+        live = self._live_bound(total)
+        if live > self.pool.num_pages:
+            raise ValueError(
+                f"request {rid}: needs {live} live pages > pool of "
+                f"{self.pool.num_pages}"
+            )
+        req = SchedRequest(
+            rid=rid, prompt_len=prompt_len, max_new_tokens=max_new_tokens,
+            orig_prompt_len=prompt_len,
+        )
+        self.requests[rid] = req
+        self.queue.append(req)
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.running)
+
+    def block_table(self, slot: int) -> np.ndarray:
+        return self.tables[slot]
+
+    # -- planning -----------------------------------------------------------
+    def plan(self) -> StepPlan:
+        preempted: List[int] = []
+        self._admit()
+        prefills: List[PrefillChunk] = []
+        # oldest first, so page pressure evicts the newest work
+        for slot, req in sorted(self.running.items(), key=lambda kv: kv[1].admit_seq):
+            if self.running.get(slot) is not req:
+                continue  # evicted by an older request earlier in this loop
+            if not req.in_prefill:
+                continue
+            length = min(self.cfg.prefill_chunk, req.prompt_len - req.prefilled)
+            end = req.prefilled + length
+            # release dead window pages BEFORE allocating for this chunk —
+            # and only up to the pre-chunk boundary: the chunk's earliest
+            # query (position `start`) still sees kpos > start - window
+            self._release_dead(req, stored=req.prefilled)
+            if not self._ensure_pages(req, end, preempted):
+                continue  # stalled this step; oldest-first makes it retry
+            prefills.append(PrefillChunk(
+                rid=req.rid, slot=slot, start=req.prefilled, length=length,
+                final=(end == req.prompt_len),
+            ))
+            req.prefilled = end
+        decode_slots: List[int] = []
+        for slot, req in sorted(self.running.items(), key=lambda kv: kv[1].admit_seq):
+            if self.running.get(slot) is not req:
+                continue  # evicted by an older request earlier in this loop
+            if req.in_prefill or req.rid in {c.rid for c in prefills}:
+                continue
+            if self._ensure_pages(req, req.decode_pos + 1, preempted):
+                decode_slots.append(slot)
+        # a request whose chunk was planned above may have been evicted by an
+        # older request's allocation — its pages are gone, drop its actions
+        if preempted:
+            gone = set(preempted)
+            prefills = [c for c in prefills if c.rid not in gone]
+        return StepPlan(prefills, decode_slots, preempted)
+
+    def on_token(self, slot: int, done: bool) -> None:
+        """Record one output token for ``slot`` (from a decode step or a
+        final prefill chunk); frees everything when the request is done."""
+        req = self.running[slot]
+        req.generated += 1
+        if done:
+            req.done = True
+            self.pool.free_request(req.rid)
+            self.tables[slot] = -1
+            del self.running[slot]
+        else:
+            # generated was just bumped, so decode_pos == tokens now stored
+            self._release_dead(req, stored=req.decode_pos)
+
+    # -- internals ----------------------------------------------------------
+    def _admit(self) -> None:
+        while self.queue:
+            free_slots = [
+                s for s in range(self.cfg.max_batch) if s not in self.running
+            ]
+            if not free_slots:
+                return
+            req = self.queue[0]
+            need = self._live_bound(req.prompt_len)
+            # pages already promised to admitted-but-still-prefilling
+            # requests count against the budget, so two large prompts
+            # cannot both be admitted into the same free pool. An idle
+            # engine waives the watermark — a request that fits the raw
+            # pool must always be admittable (deadlock avoidance).
+            committed = sum(
+                max(0, self._live_bound(r.prompt_len) - len(self.pool.owned(r.rid)))
+                for r in self.running.values() if r.in_prefill
+            )
+            reserve = self.cfg.watermark + committed if self.running else 0
+            if self.pool.free_pages - reserve < need:
+                return  # head-of-line blocking preserves FIFO order
+            self.queue.popleft()
+            req.slot = free_slots[0]
+            req.admit_seq = self._admit_counter
+            self._admit_counter += 1
+            self.running[req.slot] = req
+
+    def _live_bound(self, tokens: int) -> int:
+        """Peak live pages a span of ``tokens`` can pin. With a sliding
+        window, at most ``window + prefill_chunk - 1`` KV positions are
+        live at once (the window span plus the chunk being written), and a
+        span of L positions straddles at most pages_for(L) + 1 pages."""
+        need = self.pool.pages_for(tokens)
+        if self.cfg.window is not None:
+            span = self.cfg.window + max(self.cfg.prefill_chunk - 1, 0)
+            need = min(need, self.pool.pages_for(span) + 1)
+        return need
+
+    def _ensure_pages(self, req: SchedRequest, upto_tokens: int,
+                      preempted: List[int]) -> bool:
+        """Allocate pages so logical slots [0, upto_tokens) are mapped,
+        evicting strictly-younger requests if the pool runs dry. False if
+        the request must stall this step."""
+        need = self.pool.pages_for(upto_tokens)
+        while need > req.logical_pages:
+            n_new = need - req.logical_pages
+            pages = self.pool.alloc(req.rid, n_new)
+            if pages is None:
+                victim = self._youngest_running(older_than=req)
+                if victim is None:
+                    if req.admit_seq == min(
+                        r.admit_seq for r in self.running.values()
+                    ) and self.pool.used_pages == len(self.pool.owned(req.rid)):
+                        raise RuntimeError(
+                            f"page pool ({self.pool.num_pages}) too small for "
+                            f"request {req.rid} alone"
+                        )
+                    return False
+                self._preempt(victim)
+                preempted.append(victim.rid)
+                continue
+            for i, p in enumerate(pages):
+                self.tables[req.slot, req.logical_pages + i] = p
+            req.logical_pages = need
+        return True
+
+    def _youngest_running(self, older_than: SchedRequest) -> Optional[SchedRequest]:
+        cands = [
+            r for r in self.running.values() if r.admit_seq > older_than.admit_seq
+        ]
+        return max(cands, key=lambda r: r.admit_seq) if cands else None
+
+    def _preempt(self, victim: SchedRequest) -> None:
+        """Evict by recompute: free the pages, fold generated tokens into
+        the prompt, requeue at the front."""
+        self.pool.free_request(victim.rid)
+        self.tables[victim.slot] = -1
+        del self.running[victim.slot]
+        victim.prompt_len = victim.orig_prompt_len + victim.generated
+        victim.gen_base = victim.generated
+        victim.prefilled = 0
+        victim.logical_pages = 0
+        victim.slot = -1
+        victim.admit_seq = -1
+        victim.preemptions += 1
+        self.queue.appendleft(victim)
+
+    def _release_dead(self, req: SchedRequest, stored: int) -> None:
+        """With a sliding window, free pages no future query can see. A
+        future query at position >= ``stored`` masks kpos <= pos - window,
+        so page j is dead once (j+1)*ps - 1 <= stored - window."""
+        w = self.cfg.window
+        if w is None:
+            return
+        ps = self.cfg.page_size
+        dead = []
+        for j in range(req.logical_pages):
+            phys = self.tables[req.slot, j]
+            if phys >= 0 and (j + 1) * ps - 1 <= stored - w:
+                dead.append((j, int(phys)))
+        if dead:
+            self.pool.release(req.rid, [p for _, p in dead])
+            for j, _ in dead:
+                self.tables[req.slot, j] = -1
+
+    def apply_defrag(self, mapping: Dict[int, int]) -> None:
+        """Rewrite block tables after ``PagePool.defrag`` (the engine
+        permutes the device pool with the same mapping)."""
+        for old, new in mapping.items():
+            self.tables[self.tables == old] = -2 - new  # two-phase to avoid clashes
+        neg = self.tables <= -2
+        self.tables[neg] = -2 - self.tables[neg]

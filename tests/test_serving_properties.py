@@ -1,0 +1,197 @@
+"""Property tests for the page pool and chunked-prefill scheduler: random
+arrival / prompt-length / eos streams never leak pages (freed == allocated
+at drain), never double-assign a page, respect the free-page admission
+budget, and every submitted request terminates.
+
+The simulation core runs model-free (the scheduler is pure policy). A
+seeded sweep always runs; when hypothesis is installed the same core is
+driven by generated streams as well (CI installs it)."""
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagePool
+from repro.serving.scheduler import ChunkedScheduler, SchedulerConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _check_tables(sched: ChunkedScheduler) -> None:
+    """Every block-table entry maps to a page the slot's request owns, and
+    no physical page appears in two tables (no double-assign)."""
+    seen = {}
+    for slot, req in sched.running.items():
+        owned = set(sched.pool.owned(req.rid))
+        row = sched.tables[slot]
+        live = row[row >= 0]
+        assert len(set(live)) == len(live), f"slot {slot} repeats a page"
+        for p in live:
+            assert int(p) in owned, f"slot {slot} maps unowned page {p}"
+            assert p not in seen, f"page {p} in slots {seen[p]} and {slot}"
+            seen[p] = slot
+    # idle slots are fully cleared
+    for slot in range(sched.cfg.max_batch):
+        if slot not in sched.running:
+            assert (sched.tables[slot] == -1).all()
+
+
+def simulate(seed, num_pages=12, ps=4, max_batch=3, chunk=8, window=None,
+             n_req=8, watermark=1, eos_p=0.05, defrag_every=0, max_steps=3000):
+    """Drive the scheduler with a random stream; returns summary stats.
+    Token values are irrelevant to the policy layer, so 'decode' here is
+    just the bookkeeping calls the engine would make."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages, ps)
+    maxP = 16
+    sched = ChunkedScheduler(
+        SchedulerConfig(max_batch, ps, chunk, max_pages_per_seq=maxP,
+                        watermark=watermark, window=window),
+        pool,
+    )
+    pending = []
+    for rid in range(n_req):
+        p, m = int(rng.integers(1, 20)), int(rng.integers(1, 10))
+        if pool.pages_for(p + m) <= maxP:
+            pending.append((rid, p, m))
+    submitted, finished = set(), set()
+    steps = preemptions = 0
+    while (pending or sched.has_work) and steps < max_steps:
+        steps += 1
+        while pending and rng.random() < 0.5:
+            rid, p, m = pending.pop(0)
+            sched.submit(rid, p, m)
+            submitted.add(rid)
+        plan = sched.plan()
+        preemptions += len(plan.preempted)
+        pool.check_invariants()
+        _check_tables(sched)
+        for c in plan.prefills:
+            if c.final:
+                req = sched.running[c.slot]
+                done = req.generated + 1 >= req.max_new_tokens or rng.random() < eos_p
+                sched.on_token(c.slot, done)
+                if done:
+                    finished.add(c.rid)
+        for slot in plan.decode_slots:
+            req = sched.running[slot]
+            done = req.generated + 1 >= req.max_new_tokens or rng.random() < eos_p
+            sched.on_token(slot, done)
+            if done:
+                finished.add(req.rid)
+        if defrag_every and steps % defrag_every == 0:
+            mapping = pool.defrag()
+            if mapping:
+                sched.apply_defrag(mapping)
+            pool.check_invariants()
+            _check_tables(sched)
+    # termination: every submitted request finishes within the step bound
+    assert not sched.has_work and not pending, f"live work after {steps} steps"
+    assert finished == submitted
+    # no leak: freed == allocated at drain
+    assert pool.free_pages == num_pages
+    assert not pool._owned
+    return {"steps": steps, "preemptions": preemptions}
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("window", [None, 6])
+def test_random_streams_keep_invariants(seed, window):
+    simulate(seed, window=window)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_tight_pool_preempts_but_terminates(seed):
+    stats = simulate(seed, num_pages=7, max_batch=3, n_req=10)
+    assert stats["steps"] < 3000
+
+
+def test_defrag_mid_stream_keeps_invariants():
+    for seed in range(6):
+        simulate(seed, defrag_every=3)
+
+
+def test_admission_respects_free_page_budget():
+    """watermark + committed-prefill reservation: a second large prompt is
+    NOT admitted into pages the first one still needs."""
+    pool = PagePool(10, 4)
+    sched = ChunkedScheduler(
+        SchedulerConfig(max_batch=4, page_size=4, prefill_chunk=8,
+                        max_pages_per_seq=8, watermark=2),
+        pool,
+    )
+    sched.submit(0, 24, 2)  # needs 6 pages; 10 - 2 >= 6 -> admitted
+    sched.submit(1, 24, 2)  # 6 committed to rid 0 -> 10 - 2 - 6 < 6 -> queued
+    plan = sched.plan()
+    assert {r.rid for r in sched.running.values()} == {0}
+    assert [c.rid for c in plan.prefills] == [0]
+    # free pages never dip below the watermark through rid 0's whole life
+    while sched.has_work:
+        plan = sched.plan()
+        for c in plan.prefills:
+            if c.final:
+                sched.on_token(c.slot, sched.running[c.slot].generated + 1 >= 2)
+        for slot in plan.decode_slots:
+            sched.on_token(slot, sched.running[slot].generated + 1 >= 2)
+        running = {r.rid for r in sched.running.values()}
+        if 1 in running:
+            break
+        if 0 in running:
+            assert pool.free_pages >= 2, "admission watermark violated"
+    pool.check_invariants()
+
+
+def test_pool_rejects_oversized_request():
+    pool = PagePool(4, 4)
+    sched = ChunkedScheduler(
+        SchedulerConfig(max_batch=2, page_size=4, prefill_chunk=8,
+                        max_pages_per_seq=32, watermark=0),
+        pool,
+    )
+    with pytest.raises(ValueError):
+        sched.submit(0, 40, 8)  # 12 pages > pool of 4
+    # ... but the same span fits a window pool holding window + chunk live
+    # tokens (dead pages recycle as decode advances)
+    sched_w = ChunkedScheduler(
+        SchedulerConfig(max_batch=2, page_size=4, prefill_chunk=8,
+                        max_pages_per_seq=32, watermark=0, window=8),
+        PagePool(5, 4),
+    )
+    sched_w.submit(0, 40, 8)
+
+
+def test_pagepool_alloc_free_defrag_unit():
+    pool = PagePool(8, 4)
+    a = pool.alloc(1, 3)
+    b = pool.alloc(2, 2)
+    assert a is not None and b is not None and not set(a) & set(b)
+    assert pool.alloc(3, 4) is None and pool.free_pages == 3  # no partial
+    pool.release(1, [a[1]])
+    pool.check_invariants()
+    pool.free_request(2)
+    mapping = pool.defrag()
+    pool.check_invariants()
+    assert pool.used_pages == 2
+    owned = pool.owned(1)
+    assert sorted(owned) == [0, 1]
+    if mapping:
+        assert all(new < 2 for new in mapping.values())
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        num_pages=st.integers(4, 24),
+        ps=st.sampled_from([1, 2, 4, 8]),
+        max_batch=st.integers(1, 4),
+        chunk=st.sampled_from([1, 4, 8, 16]),
+        window=st.one_of(st.none(), st.integers(2, 12)),
+    )
+    def test_hypothesis_streams(seed, num_pages, ps, max_batch, chunk, window):
+        simulate(seed, num_pages=num_pages, ps=ps, max_batch=max_batch,
+                 chunk=chunk, window=window, n_req=6)
