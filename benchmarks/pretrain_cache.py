@@ -52,6 +52,13 @@ def get_pretrained():
 
 
 def eval_ce(cfg, params, batches: int = 6, seed: int = 999) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train.state import TrainState
+
     tr = Trainer.__new__(Trainer)  # eval-only shell
-    tr.cfg, tr.tcfg, tr.plan, tr.params = cfg, tcfg(1), None, params
+    tr.cfg, tr.tcfg, tr.plan = cfg, tcfg(1), None
+    tr.state = TrainState(jnp.zeros((), jnp.int32), params, None,
+                          jax.random.PRNGKey(0))
     return tr.eval_loss(batches=batches, seed=seed)

@@ -1,0 +1,159 @@
+"""Training-runtime bench: steady-state throughput, checkpoint cost
+(async-overlapped vs blocking), checkpoint size, and resume latency.
+
+Asserts the subsystem's headline guarantees so CI catches regressions:
+
+* async save blocks the training loop for LESS than one steady step per
+  checkpoint (the "<1 blocked step" acceptance bar) — and strictly less
+  than the equivalent blocking save;
+* a save -> restore -> continue run is bitwise the uninterrupted run.
+
+CPU wall-times are not TPU-representative, but the RATIO of blocked-save
+time to step time and the byte accounting are the quantities the async
+double-buffered design exists to optimize.
+
+Output: CSV on stdout, JSON via benchmarks.common.emit, and machine-readable
+``BENCH_train.json`` at the repo root (CI artifact).
+"""
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ModelConfig, MoEConfig, TrainConfig
+from repro.data.pipeline import make_train_iter
+from repro.train.callbacks import CheckpointCallback, LoggingCallback
+from repro.train.state import restore_train_state
+from repro.train.trainer import Trainer
+
+ROOT_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_train.json")
+CKPT_DIR = os.environ.get("BENCH_CKPT_DIR", "experiments/bench/train_ckpt")
+
+STEPS = 8
+CKPT_EVERY = 2
+
+
+def _cfg() -> ModelConfig:
+    # small e4t2 MoE: big enough that a step dwarfs host-copy cost, small
+    # enough to compile in seconds on CPU
+    return ModelConfig(
+        name="bench-e4t2", family="moe", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=1024,
+        vocab_divisor=128,
+        moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=None,
+                      dispatcher="sorted"),
+    )
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        total += sum(os.path.getsize(os.path.join(root, f)) for f in files)
+    return total
+
+
+def _run(cfg, tcfg, steps, ckpt_dir, async_save, state=None, data_state=None):
+    it = make_train_iter(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch,
+                         tcfg.blend_ratio, tcfg.seed)
+    if data_state is not None:
+        it.restore(data_state)
+    tr = Trainer(cfg, tcfg, data_iter=it, state=state)
+    log_cb = LoggingCallback(log=lambda *_: None, log_every=1)
+    ckpt_cb = CheckpointCallback(ckpt_dir, every=CKPT_EVERY,
+                                 keep_last=2, async_save=async_save)
+    tr.run(steps, log=lambda *_: None, callbacks=[log_cb, ckpt_cb])
+    return tr, log_cb, ckpt_cb
+
+
+def main():
+    cfg = _cfg()
+    tcfg = TrainConfig(global_batch=8, seq_len=64, lr=3e-3, lr_min=3e-4,
+                       warmup_steps=2, total_steps=STEPS, log_every=1, seed=0)
+
+    rows = []
+    stats = {}
+    for mode in ("blocking", "async"):
+        d = os.path.join(CKPT_DIR, mode)
+        tr, log_cb, ckpt_cb = _run(cfg, tcfg, STEPS, d, async_save=(mode == "async"))
+        ckpt_cb.manager.wait()
+        steady_s = float(np.mean(log_cb.durations[1:]))
+        blocked = ckpt_cb.blocked_s
+        stats[mode] = {
+            "steady_s": steady_s,
+            "blocked_mean_s": float(np.mean(blocked)),
+            "blocked_max_s": float(np.max(blocked)),
+            "final_loss": tr.history[-1]["loss"],
+        }
+        rows.append({
+            "mode": mode,
+            "steps_per_s": round(1.0 / steady_s, 3),
+            "ms_per_step_steady": round(steady_s * 1e3, 2),
+            "save_blocked_ms_mean": round(np.mean(blocked) * 1e3, 2),
+            "save_blocked_ms_max": round(np.max(blocked) * 1e3, 2),
+            "saves": len(blocked),
+            "ckpt_bytes": _dir_bytes(d),
+        })
+
+    # -- resume latency + exact-parity gate --------------------------------
+    d = os.path.join(CKPT_DIR, "async")
+    t0 = time.perf_counter()
+    state, manifest = restore_train_state(d, cfg)
+    jax.block_until_ready(jax.tree.leaves(state.params)[0])
+    restore_s = time.perf_counter() - t0
+    resumed, _, _ = _run(cfg, tcfg, 2, os.path.join(CKPT_DIR, "resume"),
+                         async_save=True, state=state,
+                         data_state=manifest["meta"].get("data_state"))
+    straight, _, _ = _run(cfg, tcfg, STEPS + 2, os.path.join(CKPT_DIR, "straight"),
+                          async_save=True)
+    parity = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(resumed.params),
+                        jax.tree.leaves(straight.params))
+    )
+    rows.append({
+        "mode": "resume",
+        "restore_ms": round(restore_s * 1e3, 2),
+        "resumed_from_step": manifest["step"],
+        "parity_bitwise": parity,
+    })
+
+    keys = ["mode", "steps_per_s", "ms_per_step_steady", "save_blocked_ms_mean",
+            "save_blocked_ms_max", "saves", "ckpt_bytes", "restore_ms",
+            "resumed_from_step", "parity_bitwise"]
+    emit("train_bench", rows, keys)
+
+    a, b = stats["async"], stats["blocking"]
+    report = {
+        "config": cfg.name,
+        "workload": {"steps": STEPS, "ckpt_every": CKPT_EVERY,
+                     "global_batch": tcfg.global_batch, "seq_len": tcfg.seq_len},
+        "rows": rows,
+        "async_blocked_fraction_of_step": a["blocked_max_s"] / a["steady_s"],
+        "blocking_save_fraction_of_step": b["blocked_max_s"] / b["steady_s"],
+        "resume_parity_bitwise": parity,
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {ROOT_JSON}")
+    print(f"async save blocks {a['blocked_max_s']*1e3:.1f} ms "
+          f"(max) vs {a['steady_s']*1e3:.1f} ms/step steady "
+          f"({report['async_blocked_fraction_of_step']:.2%} of a step); "
+          f"blocking save costs {b['blocked_max_s']*1e3:.1f} ms")
+
+    # acceptance gates
+    assert parity, "resume parity violated: save->restore->continue != straight run"
+    assert a["blocked_max_s"] < a["steady_s"], (
+        "async checkpoint must block the loop for less than one steady step: "
+        f"{a['blocked_max_s']:.3f}s blocked vs {a['steady_s']:.3f}s/step"
+    )
+    assert a["blocked_mean_s"] <= b["blocked_mean_s"], (
+        "async save should not block longer than the blocking save path"
+    )
+
+
+if __name__ == "__main__":
+    main()

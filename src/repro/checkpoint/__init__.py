@@ -1,1 +1,7 @@
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint, upcycle_on_load  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    latest_step,
+    list_steps,
+    restore_tree,
+)

@@ -1,7 +1,20 @@
-"""Checkpointing: manifest + per-leaf .npy storage, and the online
-upcycle-on-load path (paper §3.1: "the dense checkpoint is sharded based on
-the specified parallel training configuration, and weights are upcycled
-independently on each device").
+"""Flat (single-directory) checkpoints + the online upcycle-on-load path
+(paper §3.1: "the dense checkpoint is sharded based on the specified
+parallel training configuration, and weights are upcycled independently on
+each device").
+
+``save_checkpoint``/``load_checkpoint`` keep the seed-era params-only API
+(used by launchers, examples, and ``upcycle_on_load``) but now ride the
+sharded per-leaf writer from :mod:`repro.checkpoint.sharded`: saves touch
+only locally-addressable shards (no host gather) and record each leaf's
+PartitionSpec; loads accept an optional ``target`` sharding tree to reshard
+on read. Format-1 manifests (one whole-array ``.npy`` per leaf) remain
+loadable — ``load_checkpoint`` dispatches on ``manifest["format"]``.
+
+Full train-state checkpoints (params + optimizer + RNG + data stream) live
+in step-numbered subdirectories managed by
+:class:`repro.checkpoint.manager.CheckpointManager`; this module is the
+params-only flat layout those launchers still emit at end of run.
 
 ``upcycle_on_load`` composes load + :func:`repro.core.upcycle.upcycle_params`
 under a single jit whose ``out_shardings`` come from the *MoE* parallel
@@ -20,60 +33,53 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.checkpoint.sharded import (
+    flatten_tree,
+    read_tree,
+    snapshot_leaf,
+    unflatten_tree,
+    write_leaf,
+    write_manifest,
+)
 from repro.sharding.rules import FoldingPlan, shardings_from_decls
-
-_SEP = "::"
-
-
-def _flatten(tree, prefix=""):
-    out = {}
-    if isinstance(tree, dict):
-        for k, v in tree.items():
-            out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else k))
-    else:
-        out[prefix] = tree
-    return out
-
-
-def _unflatten(flat: Dict[str, Any]):
-    tree: Dict[str, Any] = {}
-    for key, v in flat.items():
-        parts = key.split(_SEP)
-        node = tree
-        for p in parts[:-1]:
-            node = node.setdefault(p, {})
-        node[parts[-1]] = v
-    return tree
 
 
 def save_checkpoint(path: str, params, step: int = 0, meta: Optional[Dict] = None) -> None:
+    """Params-only flat checkpoint into ``path`` (manifest written last)."""
     os.makedirs(path, exist_ok=True)
-    flat = _flatten(params)
-    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+    flat = flatten_tree(params)
+    leaves = {}
     for key, val in flat.items():
-        arr = np.asarray(jax.device_get(val))
-        fname = key.replace(_SEP, "__") + ".npy"
-        # bf16 has no numpy dtype; store as uint16 view + dtype tag
-        if arr.dtype == jnp.bfloat16:
-            np.save(os.path.join(path, fname), arr.view(np.uint16))
-            manifest["leaves"][key] = {"file": fname, "dtype": "bfloat16"}
-        else:
-            np.save(os.path.join(path, fname), arr)
-            manifest["leaves"][key] = {"file": fname, "dtype": str(arr.dtype)}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+        entry, shards = snapshot_leaf(val)
+        leaves[key] = write_leaf(path, key, entry, shards)
+    write_manifest(path, step, leaves, meta)
 
 
-def load_checkpoint(path: str) -> Dict[str, Any]:
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+def _load_v1(path: str, manifest: Dict[str, Any]) -> Dict[str, Any]:
     flat = {}
     for key, info in manifest["leaves"].items():
         arr = np.load(os.path.join(path, info["file"]))
         if info["dtype"] == "bfloat16":
             arr = jnp.asarray(arr.view(jnp.bfloat16))
         flat[key] = jnp.asarray(arr)
-    return _unflatten(flat)
+    return unflatten_tree(flat)
+
+
+def load_checkpoint(path: str, target: Optional[Any] = None) -> Dict[str, Any]:
+    """Load a flat checkpoint; handles both manifest formats.
+
+    ``target``: optional pytree of ``NamedSharding`` matching the params
+    structure — leaves then materialize directly in the target layout
+    (format-2 checkpoints only read the covering shard slices).
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format", 1) < 2:
+        params = _load_v1(path, manifest)
+        if target is not None:
+            params = jax.device_put(params, target)
+        return params
+    return read_tree(path, manifest, target)
 
 
 def upcycle_on_load(
@@ -89,13 +95,13 @@ def upcycle_on_load(
     from repro.core.upcycle import dense_input_shardings, upcycle_params
     from repro.models.model import model_decl
 
-    dense_params = load_checkpoint(path)
     fn = lambda dp: upcycle_params(dense_cfg, moe_cfg, dp, rng)
     if plan is None:
-        return jax.jit(fn)(dense_params), None
-    # shard the dense checkpoint per the *MoE* parallel config (paper §3.1)
+        return jax.jit(fn)(load_checkpoint(path)), None
+    # shard the dense checkpoint per the *MoE* parallel config (paper §3.1):
+    # the sharded loader materializes it in that layout directly
     in_sh = dense_input_shardings(dense_cfg, moe_cfg, plan)
-    dense_params = jax.device_put(dense_params, in_sh)
+    dense_params = load_checkpoint(path, target=in_sh)
     out_sh = shardings_from_decls(model_decl(moe_cfg), plan)
     jitted = jax.jit(fn, out_shardings=out_sh)
     lowered = jitted.lower(dense_params)

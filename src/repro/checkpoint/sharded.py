@@ -1,0 +1,222 @@
+"""Sharded per-leaf checkpoint I/O (manifest format 2).
+
+Save path: every pytree leaf is written as its *locally-addressable* shards
+only — one ``.npy`` file per (replica-0) device shard, with the shard's
+index (per-dim [start, stop) ranges) and the leaf's PartitionSpec recorded
+in the manifest. No full host-gather ever happens: the host copies exactly
+the bytes its devices own, shard by shard. (The writer assumes a
+single-controller host, as in this repo's fake-mesh runs; true multi-host
+saves additionally need rank-tagged shard files and a manifest merge —
+the manifest's per-shard index ranges are already the right metadata for
+that.)
+
+Restore path: :func:`read_leaf` reassembles a leaf either as a plain host
+array (``sharding=None``) or *directly into a target sharding* via
+``jax.make_array_from_callback`` — each target shard's callback reads only
+the overlapping slices of the saved shard files (memory-mapped), so a
+checkpoint saved under one mesh/FoldingPlan reshards onto a different one
+(EP on the study mesh -> ETP on the production mesh) without materializing
+a gathered copy.
+
+Manifest leaf entry::
+
+    {"dtype": "bfloat16", "shape": [512, 64], "spec": ["expert", null],
+     "shards": [{"file": "k__0.npy", "index": [[0, 256], [0, 64]]}, ...]}
+
+bf16 has no portable numpy storage dtype; shard files hold a uint16 view
+plus the dtype tag (same convention as the format-1 checkpoints).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import spec_to_json
+
+_SEP = "::"
+
+MANIFEST = "manifest.json"
+FORMAT = 2
+
+
+def flatten_tree(tree, prefix: str = "") -> Dict[str, Any]:
+    """Nested dicts -> flat ``a::b::c`` keys (leaves = anything non-dict)."""
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_tree(v, f"{prefix}{_SEP}{k}" if prefix else k))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def unflatten_tree(flat: Dict[str, Any]):
+    tree: Dict[str, Any] = {}
+    for key, v in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def _norm_index(index: Sequence[slice], shape: Sequence[int]) -> List[List[int]]:
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = dim if sl.stop is None else int(sl.stop)
+        out.append([start, stop])
+    return out
+
+
+def snapshot_leaf(arr) -> Tuple[Dict[str, Any], List[Tuple[List[List[int]], np.ndarray]]]:
+    """Host-copy a leaf's locally-addressable replica-0 shards.
+
+    Returns ``(manifest_entry_sans_files, [(index, np_shard), ...])``. The
+    numpy copies are made immediately (``np.array``), so the caller may hand
+    the result to a background writer thread while the training step donates
+    and overwrites the device buffers — the donation-safe host copy.
+    """
+    spec = None
+    if isinstance(arr, jax.Array):
+        sh = arr.sharding
+        spec = spec_to_json(getattr(sh, "spec", None))
+        shards = [
+            (_norm_index(s.index, arr.shape), np.array(s.data))
+            for s in arr.addressable_shards
+            if s.replica_id == 0
+        ]
+        if not shards:  # pure replica on this host: keep one copy anyway
+            s = arr.addressable_shards[0]
+            shards = [(_norm_index(s.index, arr.shape), np.array(s.data))]
+    else:
+        a = np.asarray(arr)
+        shards = [(_norm_index((slice(None),) * a.ndim, a.shape), np.array(a))]
+    a0 = shards[0][1]
+    dtype = "bfloat16" if a0.dtype == jnp.bfloat16 else str(a0.dtype)
+    entry = {
+        "dtype": dtype,
+        "shape": list(np.asarray(arr).shape) if not isinstance(arr, jax.Array) else list(arr.shape),
+        "spec": spec,
+    }
+    return entry, shards
+
+
+def write_leaf(
+    path: str,
+    key: str,
+    entry: Dict[str, Any],
+    shards: List[Tuple[List[List[int]], np.ndarray]],
+) -> Dict[str, Any]:
+    """Write a snapshot's shard files under ``path``; returns the completed
+    manifest entry (with file names)."""
+    base = key.replace(_SEP, "__")
+    recs = []
+    for i, (index, data) in enumerate(shards):
+        fname = f"{base}__s{i}.npy" if len(shards) > 1 else f"{base}.npy"
+        if entry["dtype"] == "bfloat16":
+            np.save(os.path.join(path, fname), data.view(np.uint16))
+        else:
+            np.save(os.path.join(path, fname), data)
+        recs.append({"file": fname, "index": index})
+    return {**entry, "shards": recs}
+
+
+def _load_shard(path: str, fname: str, dtype: str) -> np.ndarray:
+    arr = np.load(os.path.join(path, fname), mmap_mode="r")
+    if dtype == "bfloat16":
+        arr = arr.view(jnp.bfloat16)  # dtype view on the memmap — no copy
+    return arr
+
+
+def _np_dtype(dtype: str):
+    return jnp.bfloat16 if dtype == "bfloat16" else np.dtype(dtype)
+
+
+def _assemble(
+    path: str,
+    entry: Dict[str, Any],
+    block: Sequence[slice],
+    cache: Dict[str, np.ndarray],
+) -> np.ndarray:
+    """Build the requested block of a leaf from the overlapping saved shards."""
+    shape = entry["shape"]
+    req = [
+        (0 if s.start is None else s.start, d if s.stop is None else s.stop)
+        for s, d in zip(block, shape)
+    ]
+    out = np.zeros([hi - lo for lo, hi in req], dtype=_np_dtype(entry["dtype"]))
+    covered = 0
+    for rec in entry["shards"]:
+        inter = []
+        for (rlo, rhi), (slo, shi) in zip(req, rec["index"]):
+            lo, hi = max(rlo, slo), min(rhi, shi)
+            if lo >= hi:
+                inter = None
+                break
+            inter.append((lo, hi))
+        if inter is None and len(shape) > 0:
+            continue
+        if rec["file"] not in cache:
+            cache[rec["file"]] = _load_shard(path, rec["file"], entry["dtype"])
+        data = cache[rec["file"]]
+        if len(shape) == 0:
+            return np.asarray(data).reshape(())
+        dst = tuple(slice(lo - rlo, hi - rlo) for (lo, hi), (rlo, _) in zip(inter, req))
+        src = tuple(slice(lo - slo, hi - slo) for (lo, hi), (slo, _) in zip(inter, rec["index"]))
+        out[dst] = data[src]
+        covered += int(np.prod([hi - lo for lo, hi in inter]))
+    assert covered == out.size, (
+        f"checkpoint shards do not cover requested block {req} "
+        f"(covered {covered}/{out.size} elements)"
+    )
+    return out
+
+
+def read_leaf(path: str, entry: Dict[str, Any], sharding=None) -> jax.Array:
+    """Reassemble a saved leaf.
+
+    ``sharding=None`` returns the full (host-assembled) array; with a target
+    ``Sharding`` the leaf is built shard-by-shard via
+    ``jax.make_array_from_callback`` so only the bytes each target device
+    needs are read — the elastic-restore path.
+    """
+    shape = tuple(entry["shape"])
+    cache: Dict[str, np.ndarray] = {}
+    if sharding is None:
+        full = _assemble(path, entry, (slice(None),) * len(shape), cache)
+        return jnp.asarray(full)
+    return jax.make_array_from_callback(
+        shape, sharding, lambda idx: _assemble(path, entry, idx, cache)
+    )
+
+
+def read_tree(path: str, manifest: Dict[str, Any], target: Optional[Any] = None):
+    """Manifest -> nested-dict tree; ``target`` (same structure, or flat) maps
+    leaves to shardings for elastic restore. Shared by the flat-checkpoint
+    loader and the step-dir manager."""
+    flat_target = flatten_tree(target) if target is not None else {}
+    flat = {
+        key: read_leaf(path, entry, flat_target.get(key))
+        for key, entry in manifest["leaves"].items()
+    }
+    return unflatten_tree(flat)
+
+
+def write_manifest(path: str, step: int, leaves: Dict[str, Any], meta: Optional[Dict] = None):
+    """Manifest is written LAST: a directory with a manifest is complete."""
+    manifest = {"format": FORMAT, "step": step, "meta": meta or {}, "leaves": leaves}
+    with open(os.path.join(path, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def read_manifest(path: str) -> Dict[str, Any]:
+    with open(os.path.join(path, MANIFEST)) as f:
+        return json.load(f)

@@ -50,6 +50,29 @@ def dense_input_shardings(dense_cfg: ModelConfig, moe_cfg: ModelConfig, plan):
     return shardings_from_decls(model_decl(dense_cfg), plan, overrides)
 
 
+def upcycle_provenance(
+    dense_cfg: ModelConfig,
+    moe_cfg: ModelConfig,
+    source_ckpt: Optional[str] = None,
+) -> Dict[str, Any]:
+    """Provenance block recorded into full-state checkpoint manifests of an
+    upcycled run. On ``--resume`` the launcher sees this and restarts from
+    the latest MoE TrainState instead of re-upcycling the dense source —
+    the upcycle is a one-time init, not part of the resume path."""
+    m = moe_cfg.moe
+    assert m is not None
+    return {
+        "upcycled": True,
+        "dense_config": dense_cfg.name,
+        "moe_config": moe_cfg.name,
+        "num_experts": m.num_experts,
+        "top_k": m.top_k,
+        "capacity_factor": m.capacity_factor,
+        "router_type": m.router_type,
+        "source_ckpt": source_ckpt,
+    }
+
+
 def upcycle_config(dense: ModelConfig, moe: MoEConfig, name: Optional[str] = None) -> ModelConfig:
     """Dense config -> N-Expert Top-k MoE config (family 'moe'/'hybrid')."""
     assert dense.d_ff > 0, "cannot upcycle an FFN-free architecture (see DESIGN.md)"

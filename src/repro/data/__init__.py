@@ -1,1 +1,6 @@
-from repro.data.pipeline import BlendedDataset, SyntheticSource, make_train_iter  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    BlendedDataset,
+    SyntheticSource,
+    TrainIterator,
+    make_train_iter,
+)

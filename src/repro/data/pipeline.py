@@ -14,7 +14,7 @@ global-batch arrays; the launcher device_puts them with the batch sharding.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -74,6 +74,58 @@ class BlendedDataset:
         }
 
 
+class TrainIterator:
+    """Stateful blended-batch iterator with an exact-resume snapshot.
+
+    ``state()`` captures the numpy bit-generator state (plus a consumed-batch
+    counter for bookkeeping) as a JSON-serializable dict; ``restore()`` puts
+    an iterator built with the SAME constructor arguments back to that point,
+    so the post-restore batch sequence is bitwise the uninterrupted one. The
+    snapshot rides in the checkpoint manifest's ``meta`` (it is host state,
+    not a device array — see ``train/state.py``).
+    """
+
+    def __init__(
+        self,
+        dataset: BlendedDataset,
+        batch_size: int,
+        extra: Optional[Dict[str, Tuple[int, ...]]] = None,
+        sample_seed: int = 0,
+    ):
+        self.ds = dataset
+        self.batch_size = batch_size
+        self.extra = extra
+        self._rng = np.random.default_rng(sample_seed + 17)
+        self._batches = 0
+
+    def __iter__(self) -> "TrainIterator":
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.ds.batch(self._rng, self.batch_size)
+        if self.extra:
+            for k, shape in self.extra.items():
+                b[k] = self._rng.standard_normal(shape).astype(np.float32) * 0.02
+        self._batches += 1
+        return b
+
+    def state(self) -> Dict:
+        return {
+            "rng": self._rng.bit_generator.state,
+            "batches": self._batches,
+            "batch_size": self.batch_size,
+        }
+
+    def restore(self, state: Dict) -> "TrainIterator":
+        assert state.get("batch_size", self.batch_size) == self.batch_size, (
+            "resuming with a different global batch size changes the sample "
+            "stream; restart the data state explicitly if that is intended"
+        )
+        self._rng.bit_generator.state = state["rng"]
+        self._batches = int(state["batches"])
+        return self
+
+
 def make_train_iter(
     vocab_size: int,
     seq_len: int,
@@ -82,17 +134,15 @@ def make_train_iter(
     seed: int = 0,
     extra: Optional[Dict[str, Tuple[int, ...]]] = None,
     sample_seed: Optional[int] = None,
-) -> Iterator[Dict[str, np.ndarray]]:
+) -> TrainIterator:
     """Yields global batches forever, deterministically. ``seed`` defines
     the LANGUAGE (the two sources' statistics); ``sample_seed`` the sampling
     stream — held-out evaluation uses the same seed with a fresh
     sample_seed. ``extra`` adds float stub inputs (vlm 'embeds' / audio
-    'frames') of the given shapes."""
+    'frames') of the given shapes. The returned iterator exposes
+    ``state()/restore()`` for exact checkpoint-resume of the data stream."""
     ds = BlendedDataset(vocab_size, seq_len, blend_ratio, seed)
-    rng = np.random.default_rng((sample_seed if sample_seed is not None else seed) + 17)
-    while True:
-        b = ds.batch(rng, batch_size)
-        if extra:
-            for k, shape in extra.items():
-                b[k] = rng.standard_normal(shape).astype(np.float32) * 0.02
-        yield b
+    return TrainIterator(
+        ds, batch_size, extra,
+        sample_seed=(sample_seed if sample_seed is not None else seed),
+    )

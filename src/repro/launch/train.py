@@ -4,11 +4,23 @@
       --steps 100 --batch 8 --seq 128
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \\
       --upcycle 4 --top-k 2 --cf 4 --from-ckpt /tmp/dense_ckpt --steps 200
+  # preempt it, then pick up exactly where it stopped:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \\
+      --upcycle 4 --top-k 2 --cf 4 --from-ckpt /tmp/dense_ckpt --steps 200 \\
+      --resume
 
 ``--smoke`` selects the reduced config (CPU-runnable); without it the full
 assigned config is used (cluster scale). ``--upcycle N`` converts the dense
 config to an N-expert MoE, optionally initializing from ``--from-ckpt`` via
 online upcycling.
+
+Resume semantics: ``--ckpt-every`` writes FULL TrainState checkpoints
+(params + AdamW state + RNG + data-stream snapshot) into step-numbered
+subdirectories of the checkpoint dir via the async manager; ``--resume``
+restores the latest one and continues to ``--steps`` total steps. A run
+that started via upcycling restarts from its latest MoE state — the dense
+source is only touched when no full-state checkpoint exists yet (the
+provenance block in the manifest records the recipe).
 """
 from __future__ import annotations
 
@@ -42,7 +54,15 @@ def build_argparser() -> argparse.ArgumentParser:
     )
     ap.add_argument("--from-ckpt", default=None)
     ap.add_argument("--save-ckpt", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="full-state checkpoint period (0 = off)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="keep-last-k retention for full-state checkpoints")
+    ap.add_argument("--blocking-ckpt", action="store_true",
+                    help="disable the async double-buffered save path")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest full-state checkpoint from the "
+                         "checkpoint dir and continue to --steps total")
     ap.add_argument("--use-kernel", action="store_true")
     return ap
 
@@ -52,10 +72,12 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
+    ckpt_dir = args.save_ckpt or "/tmp/repro_ckpt"
 
-    params = None
+    provenance = {}
+    dense_cfg = None
     if args.upcycle:
-        from repro.core.upcycle import upcycle_config, upcycle_params
+        from repro.core.upcycle import upcycle_config
 
         cf = args.cf if args.cf > 0 else None
         # dropless default: the sorted dispatcher computes every assignment
@@ -67,19 +89,44 @@ def main(argv=None):
         )
         dense_cfg = cfg
         cfg = upcycle_config(dense_cfg, moe)
-        if args.from_ckpt:
-            from repro.checkpoint.ckpt import load_checkpoint
-
-            dense_params = load_checkpoint(args.from_ckpt)
-            params = upcycle_params(dense_cfg, cfg, dense_params, jax.random.PRNGKey(args.seed))
-            print(f"upcycled {dense_cfg.name} -> {cfg.name} from {args.from_ckpt}")
 
     tcfg = TrainConfig(
         global_batch=args.batch, seq_len=args.seq, lr=args.lr, lr_min=args.lr / 100,
         warmup_steps=min(100, args.steps // 10 + 1), total_steps=args.steps,
-        seed=args.seed, ckpt_every=args.ckpt_every,
-        ckpt_dir=args.save_ckpt or "/tmp/repro_ckpt",
+        seed=args.seed, ckpt_every=args.ckpt_every, ckpt_dir=ckpt_dir,
     )
+
+    # -- resume first: a run that started via upcycling restarts from its
+    # latest MoE TrainState, NOT by re-upcycling the dense source ----------
+    state = None
+    data_state = None
+    if args.resume:
+        from repro.checkpoint.manager import latest_step
+        from repro.train.state import restore_train_state
+
+        latest = latest_step(ckpt_dir)
+        if latest is not None:
+            state, manifest = restore_train_state(ckpt_dir, cfg, plan=None,
+                                                  zero1=tcfg.zero1)
+            data_state = manifest["meta"].get("data_state")
+            provenance = manifest["meta"].get("provenance", {})
+            print(f"resumed step {latest} from {ckpt_dir}"
+                  + (" (upcycled run)" if provenance.get("upcycled") else ""))
+        else:
+            print(f"--resume: no full-state checkpoint under {ckpt_dir}; "
+                  "starting fresh")
+
+    params = None
+    if state is None and args.upcycle and args.from_ckpt:
+        from repro.checkpoint.ckpt import load_checkpoint
+        from repro.core.upcycle import upcycle_params, upcycle_provenance
+
+        dense_params = load_checkpoint(args.from_ckpt)
+        params = upcycle_params(dense_cfg, cfg, dense_params,
+                                jax.random.PRNGKey(args.seed))
+        provenance = upcycle_provenance(dense_cfg, cfg, args.from_ckpt)
+        print(f"upcycled {dense_cfg.name} -> {cfg.name} from {args.from_ckpt}")
+
     extra = None
     if cfg.family == "vlm":
         extra = {"embeds": (args.batch, cfg.num_prefix_embeds, cfg.d_model)}
@@ -87,12 +134,32 @@ def main(argv=None):
         extra = {"frames": (args.batch, args.seq, cfg.d_model)}
     it = make_train_iter(cfg.vocab_size, args.seq, args.batch,
                          tcfg.blend_ratio, args.seed, extra)
+    if data_state is not None:
+        it.restore(data_state)
     t, a = cfg.param_counts()
     print(f"training {cfg.name}: {t/1e6:.1f}M total / {a/1e6:.1f}M active params")
     # archs that are already MoE take the --dispatcher override here
-    tr = Trainer(cfg, tcfg, params=params, data_iter=it,
+    tr = Trainer(cfg, tcfg, params=params, state=state, data_iter=it,
                  use_kernel=args.use_kernel, dispatcher=args.dispatcher)
-    tr.run(args.steps)
+
+    from repro.train.callbacks import CheckpointCallback, LoggingCallback
+
+    callbacks = [LoggingCallback(log_every=tcfg.log_every)]
+    if args.ckpt_every:
+        callbacks.append(CheckpointCallback(
+            ckpt_dir, every=args.ckpt_every, keep_last=args.ckpt_keep,
+            async_save=not args.blocking_ckpt,
+            extra_meta={"arch": args.arch, "seed": args.seed,
+                        **({"provenance": provenance} if provenance else {})},
+        ))
+
+    done = int(jax.device_get(tr.state.step))
+    remaining = max(0, args.steps - done)
+    if remaining:
+        tr.run(remaining, callbacks=callbacks)
+    else:
+        print(f"checkpoint already at step {done} >= --steps {args.steps}; "
+              "nothing to run")
     if args.save_ckpt:
         from repro.checkpoint.ckpt import save_checkpoint
 

@@ -39,6 +39,21 @@ def adamw_init(params) -> AdamWState:
     return AdamWState(jnp.zeros((), jnp.int32), f32(params), zeros(params), zeros(params))
 
 
+def opt_state_abstract(params_abs) -> AdamWState:
+    """ShapeDtypeStruct skeleton of the optimizer state for a params
+    abstraction (ShapeDtypeStructs or concrete arrays) — used by checkpoint
+    restore to validate a manifest against the model before materializing."""
+    f32 = lambda t: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), t
+    )
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        master=f32(params_abs),
+        m=f32(params_abs),
+        v=f32(params_abs),
+    )
+
+
 def _zero1_spec(decl: ParamDecl, plan: FoldingPlan) -> P:
     """Param spec + shard the largest remaining dim over 'data' (ZeRO-1).
     No-op for dims already data-sharded (e.g. FSDP params)."""

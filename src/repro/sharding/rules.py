@@ -160,6 +160,25 @@ class FoldingPlan:
 
 
 # ---------------------------------------------------------------------------
+# PartitionSpec <-> JSON (checkpoint manifests record the spec each leaf was
+# SAVED under; restore re-resolves specs for the TARGET mesh via the decl
+# tables above, so the recorded spec is provenance, not a constraint).
+# ---------------------------------------------------------------------------
+
+
+def spec_to_json(spec: Optional[P]) -> Optional[list]:
+    if spec is None:
+        return None
+    return [list(p) if isinstance(p, tuple) else p for p in spec]
+
+
+def spec_from_json(obj: Optional[Sequence]) -> Optional[P]:
+    if obj is None:
+        return None
+    return P(*[tuple(p) if isinstance(p, list) else p for p in obj])
+
+
+# ---------------------------------------------------------------------------
 # Parameter declarations: single source of truth for shape/init/sharding.
 # ---------------------------------------------------------------------------
 

@@ -1,1 +1,15 @@
-from repro.train.trainer import Trainer, make_train_step  # noqa: F401
+from repro.train.callbacks import (  # noqa: F401
+    Callback,
+    CheckpointCallback,
+    EvalCallback,
+    LoggingCallback,
+)
+from repro.train.state import (  # noqa: F401
+    TrainState,
+    create_train_state,
+    restore_train_state,
+    state_sharding_tree,
+    state_to_tree,
+    tree_to_state,
+)
+from repro.train.trainer import Trainer, make_state_step, make_train_step  # noqa: F401

@@ -1,0 +1,165 @@
+"""Explicit training state: ONE pytree carrying everything a run needs to
+restart exactly — params, AdamW state, step counter, and the PRNG key the
+loop splits per step. The host-side data-iterator state (a numpy
+bit-generator snapshot, see ``data/pipeline.TrainIterator``) rides in the
+checkpoint manifest's ``meta`` instead, since it is not a device array.
+
+The checkpoint subsystem stores plain nested dicts; ``state_to_tree`` /
+``tree_to_state`` define the stable on-disk structure::
+
+    {"step": i32[], "rng": u32[2],
+     "params": {...model params...},
+     "opt": {"step": i32[], "master": {...}, "m": {...}, "v": {...}}}
+
+``restore_train_state`` re-resolves shardings for the TARGET mesh from the
+model's ParamDecls (``sharding/rules.py``), so a checkpoint saved under one
+FoldingPlan (e.g. EP on the 3-D study mesh) restores onto a different one
+(ETP on the production mesh) — elastic mesh reshaping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, TrainConfig
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_init,
+    opt_state_abstract,
+    opt_state_shardings,
+)
+from repro.sharding.rules import (
+    FoldingPlan,
+    abstract_from_decls,
+    init_from_decls,
+    shardings_from_decls,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    """The recipe runtime's unit of progress; jit-carried and checkpointed."""
+
+    step: jax.Array  # i32 scalar: optimizer updates applied == batches consumed
+    params: Any  # bf16/compute params (pytree of dicts)
+    opt_state: AdamWState
+    rng: jax.Array  # per-run sampling key; split once per step inside the jit
+
+
+def create_train_state(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    plan: Optional[FoldingPlan] = None,
+    params: Optional[Any] = None,
+) -> TrainState:
+    """Fresh state: init (sharded when ``plan``) or adopt given ``params``."""
+    from repro.models.model import model_decl
+
+    decls = model_decl(cfg)
+    key = jax.random.PRNGKey(tcfg.seed)
+    if params is not None:
+        # the jitted step donates its inputs; never consume the caller's
+        # buffers (they may be the upcycling source checkpoint)
+        params = jax.tree.map(jnp.array, params)
+    elif plan is None:
+        params = init_from_decls(decls, key)
+    else:
+        sh = shardings_from_decls(decls, plan)
+        params = jax.jit(lambda k: init_from_decls(decls, k), out_shardings=sh)(key)
+    if plan is None:
+        opt_state = jax.jit(adamw_init)(params)
+    else:
+        opt_sh = opt_state_shardings(decls, plan, tcfg.zero1)
+        opt_state = jax.jit(adamw_init, out_shardings=opt_sh)(params)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=opt_state,
+        rng=jax.random.PRNGKey(tcfg.seed + 1),
+    )
+
+
+def state_to_tree(state: TrainState) -> Dict[str, Any]:
+    o = state.opt_state
+    return {
+        "step": state.step,
+        "rng": state.rng,
+        "params": state.params,
+        "opt": {"step": o.step, "master": o.master, "m": o.m, "v": o.v},
+    }
+
+
+def tree_to_state(tree: Dict[str, Any]) -> TrainState:
+    o = tree["opt"]
+    return TrainState(
+        step=tree["step"],
+        params=tree["params"],
+        opt_state=AdamWState(step=o["step"], master=o["master"], m=o["m"], v=o["v"]),
+        rng=tree["rng"],
+    )
+
+
+def state_sharding_tree(decls, plan: Optional[FoldingPlan], zero1: bool = True):
+    """Target shardings for a TrainState tree on ``plan``'s mesh (None on the
+    host path — leaves then restore as plain committed arrays)."""
+    if plan is None:
+        return None
+    rep = NamedSharding(plan.mesh, P())
+    opt_sh = opt_state_shardings(decls, plan, zero1)
+    return {
+        "step": rep,
+        "rng": rep,
+        "params": shardings_from_decls(decls, plan),
+        "opt": {
+            "step": opt_sh.step,
+            "master": opt_sh.master,
+            "m": opt_sh.m,
+            "v": opt_sh.v,
+        },
+    }
+
+
+def _check_shapes(tree: Dict[str, Any], decls) -> None:
+    from repro.checkpoint.sharded import flatten_tree
+
+    abs_params = flatten_tree(
+        jax.tree.map(lambda a: a.shape, abstract_from_decls(decls))
+    )
+    abs_opt = flatten_tree(
+        jax.tree.map(lambda a: a.shape, opt_state_abstract(abstract_from_decls(decls)).master)
+    )
+    got_p = flatten_tree(jax.tree.map(lambda a: a.shape, tree["params"]))
+    assert got_p == abs_params, (
+        "checkpoint params do not match the model declaration — resuming a "
+        "different config? missing/extra: "
+        f"{sorted(set(got_p) ^ set(abs_params))[:8]} shape diffs: "
+        f"{[k for k in got_p if k in abs_params and got_p[k] != abs_params[k]][:8]}"
+    )
+    got_m = flatten_tree(jax.tree.map(lambda a: a.shape, tree["opt"]["master"]))
+    assert got_m == abs_opt, "checkpoint optimizer state does not match the model"
+
+
+def restore_train_state(
+    directory: str,
+    cfg: ModelConfig,
+    plan: Optional[FoldingPlan] = None,
+    zero1: bool = True,
+    step: Optional[int] = None,
+) -> Tuple[TrainState, Dict[str, Any]]:
+    """Restore the latest (or given) full-state checkpoint, resharded for the
+    target ``plan``. Returns ``(state, manifest)``; the manifest's ``meta``
+    carries the data-iterator snapshot and any provenance the run recorded.
+    """
+    from repro.checkpoint.manager import restore_tree
+    from repro.models.model import model_decl
+
+    decls = model_decl(cfg)
+    target = state_sharding_tree(decls, plan, zero1)
+    tree, manifest = restore_tree(directory, step=step, target=target)
+    _check_shapes(tree, decls)
+    return tree_to_state(tree), manifest

@@ -1,5 +1,9 @@
-"""Training loop: jitted step (loss + grad + clip + AdamW/ZeRO-1 + schedule),
-metrics, MFU accounting, periodic checkpointing.
+"""Training recipe loop: jitted TrainState step (loss + grad + clip +
+AdamW/ZeRO-1 + schedule) driven by a tiny loop with composable callbacks
+(logging/MFU, periodic eval, full-state async checkpointing — see
+``train/callbacks.py``). The state itself (params, optimizer, step, RNG) is
+the explicit :class:`repro.train.state.TrainState` pytree, so checkpointing
+and exact resume are properties of the state, not of this loop.
 
 The same ``make_train_step`` is what the multi-pod dry-run lowers — there is
 no separate "dry-run model"; the production step function is the artifact
@@ -8,21 +12,19 @@ being compiled and analyzed.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Iterator, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, TrainConfig, with_dispatcher
-from repro.models.model import loss_fn, model_decl
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update, opt_state_shardings
+from repro.models.model import loss_fn
+from repro.optim.adamw import AdamWState, adamw_update
 from repro.optim.schedule import cosine_schedule
-from repro.sharding.rules import (
-    FoldingPlan,
-    init_from_decls,
-    shardings_from_decls,
-)
+from repro.sharding.rules import FoldingPlan
+from repro.train.callbacks import Callback, CheckpointCallback, LoggingCallback
+from repro.train.state import TrainState, create_train_state
 
 
 def make_train_step(
@@ -83,6 +85,12 @@ def make_train_step(
             opt_state.step, tcfg.lr, tcfg.lr_min, tcfg.warmup_steps, tcfg.total_steps
         )
         new_params, new_opt = adamw_update(tcfg, grads, opt_state, lr)
+        # adamw_update types new params from the grads; microbatch-accumulated
+        # grads are fp32, so pin the compute dtype back to the params' (no-op
+        # when m_eff == 1) — otherwise step 2 retraces with fp32 params
+        new_params = jax.tree.map(
+            lambda n, p: n.astype(p.dtype), new_params, params
+        )
         gnorm = jnp.sqrt(
             sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
         )
@@ -92,7 +100,34 @@ def make_train_step(
     return step
 
 
+def make_state_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    plan: Optional[FoldingPlan],
+    use_kernel: bool = False,
+    microbatches: Optional[int] = None,
+):
+    """TrainState-level step: ``step(state, batch) -> (state, metrics)``.
+
+    The per-step PRNG split happens INSIDE the jit from ``state.rng``, so
+    the key sequence is a pure function of the checkpointed state — exact
+    resume needs no host-side RNG bookkeeping."""
+    inner = make_train_step(cfg, tcfg, plan, use_kernel, microbatches)
+
+    def step(state: TrainState, batch):
+        rng, sk = jax.random.split(state.rng)
+        params, opt_state, metrics = inner(state.params, state.opt_state, batch, sk)
+        return TrainState(state.step + 1, params, opt_state, rng), metrics
+
+    return step
+
+
 class Trainer:
+    """Recipe runtime: owns a TrainState + the jitted state step, and runs
+    the loop under composable callbacks. Construct fresh (``params=None`` or
+    a params pytree) or from a restored ``state=``
+    (:func:`repro.train.state.restore_train_state`)."""
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -102,71 +137,77 @@ class Trainer:
         data_iter: Optional[Iterator[Dict[str, np.ndarray]]] = None,
         use_kernel: bool = False,
         dispatcher: Optional[str] = None,
+        state: Optional[TrainState] = None,
+        callbacks: Optional[Sequence[Callback]] = None,
     ):
         cfg = with_dispatcher(cfg, dispatcher)
         self.cfg, self.tcfg, self.plan = cfg, tcfg, plan
-        decls = model_decl(cfg)
-        rng = jax.random.PRNGKey(tcfg.seed)
-        if params is not None:
-            # the jitted step donates its inputs; never consume the caller's
-            # buffers (they may be the upcycling source checkpoint)
-            params = jax.tree.map(jnp.array, params)
-        if params is None:
-            if plan is None:
-                params = init_from_decls(decls, rng)
-            else:
-                sh = shardings_from_decls(decls, plan)
-                params = jax.jit(
-                    lambda k: init_from_decls(decls, k), out_shardings=sh
-                )(rng)
-        self.params = params
-        if plan is None:
-            self.opt_state = jax.jit(adamw_init)(params)
-        else:
-            opt_sh = opt_state_shardings(decls, plan, tcfg.zero1)
-            self.opt_state = jax.jit(adamw_init, out_shardings=opt_sh)(params)
-        step = make_train_step(cfg, tcfg, plan, use_kernel)
-        self.step_fn = jax.jit(step, donate_argnums=(0, 1))
+        if state is None:
+            state = create_train_state(cfg, tcfg, plan, params=params)
+        self.state = state
+        self.step_fn = jax.jit(
+            make_state_step(cfg, tcfg, plan, use_kernel), donate_argnums=(0,)
+        )
         self.data_iter = data_iter
-        self.rng = jax.random.PRNGKey(tcfg.seed + 1)
+        self.callbacks = list(callbacks) if callbacks is not None else None
         self.history: list = []
 
-    def run(self, steps: int, log=print) -> Dict[str, list]:
-        assert self.data_iter is not None
-        n_chips = 1 if self.plan is None else self.plan.mesh.devices.size
-        tokens_per_step = self.tcfg.global_batch * self.tcfg.seq_len
-        # MFU accounting: 3x = fwd + bwd (2x) model FLOPs, the paper's (and
-        # Megatron's) convention. Recompute FLOPs are EXCLUDED: the Pallas
-        # backward re-derives the SwiGLU gate/up projections and the flash
-        # probability blocks instead of saving them, so the kernel path does
-        # strictly more arithmetic than 3x — reported MFU is therefore a
-        # slight *under*-estimate there, never inflated by recompute.
-        flops_per_step = 3 * self.cfg.flops_per_token(self.tcfg.seq_len) * tokens_per_step
-        t0 = time.perf_counter()
-        for i in range(steps):
-            batch = {k: jnp.asarray(v) for k, v in next(self.data_iter).items()}
-            self.rng, sk = jax.random.split(self.rng)
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch, sk
-            )
-            if (i + 1) % self.tcfg.log_every == 0 or i == 0:
-                metrics = jax.device_get(metrics)
-                dt = (time.perf_counter() - t0) / (i + 1)
-                rec = {
-                    "step": i + 1,
-                    **{k: float(v) for k, v in metrics.items()},
-                    "sec_per_step": dt,
-                    "model_tflops_per_sec": flops_per_step / dt / 1e12 / n_chips,
-                }
-                self.history.append(rec)
-                log(
-                    f"step {rec['step']:5d} loss {rec['loss']:.4f} ce {rec['ce']:.4f} "
-                    f"lr {rec['lr']:.2e} gnorm {rec['grad_norm']:.2f} {dt*1e3:.0f} ms/step"
-                )
-            if self.tcfg.ckpt_every and (i + 1) % self.tcfg.ckpt_every == 0:
-                from repro.checkpoint.ckpt import save_checkpoint
+    # seed-era attribute access (tests, examples, benchmarks read these)
+    @property
+    def params(self):
+        return self.state.params
 
-                save_checkpoint(self.tcfg.ckpt_dir, self.params, step=i + 1)
+    @params.setter
+    def params(self, value):
+        import dataclasses
+
+        self.state = dataclasses.replace(self.state, params=value)
+
+    @property
+    def opt_state(self) -> AdamWState:
+        return self.state.opt_state
+
+    @property
+    def rng(self):
+        return self.state.rng
+
+    def default_callbacks(self, log=print) -> List[Callback]:
+        cbs: List[Callback] = [LoggingCallback(log=log, log_every=self.tcfg.log_every)]
+        if self.tcfg.ckpt_every:
+            cbs.append(
+                CheckpointCallback(self.tcfg.ckpt_dir, every=self.tcfg.ckpt_every)
+            )
+        return cbs
+
+    def run(
+        self,
+        steps: int,
+        log=print,
+        callbacks: Optional[Sequence[Callback]] = None,
+    ) -> Dict[str, list]:
+        """Run ``steps`` more steps. Global step numbering continues from
+        ``state.step`` (resume-aware); metrics/timing/checkpoints are the
+        callbacks' business."""
+        assert self.data_iter is not None
+        cbs = list(callbacks) if callbacks is not None else self.callbacks
+        if cbs is None:
+            cbs = self.default_callbacks(log)
+        base = int(jax.device_get(self.state.step))
+        for cb in cbs:
+            cb.on_run_begin(self)
+        for i in range(steps):
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in next(self.data_iter).items()}
+            self.state, metrics = self.step_fn(self.state, batch)
+            # sync on the (tiny) metrics so per-step wall times are honest;
+            # the big state buffers stay on device and the checkpoint
+            # writer thread still overlaps subsequent steps
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            for cb in cbs:
+                cb.on_step_end(self, base + i + 1, metrics, dt)
+        for cb in cbs:
+            cb.on_run_end(self)
         return {"history": self.history}
 
     def eval_loss(self, batches: int = 8, seed: int = 999, data_seed: Optional[int] = None) -> float:
