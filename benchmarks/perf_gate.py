@@ -1,0 +1,204 @@
+"""Perf gate: diff freshly generated ``BENCH_*.json`` artifacts against the
+committed baselines in ``benchmarks/baselines/`` with per-metric tolerance
+bands, failing CI on regressions.
+
+Metric classes (by key name / leaf type):
+
+* **timing** (``us_*``, ``*_ms``, ``*_per_s`` ...) — CPU wall times on CI
+  runners are very noisy, so the band is generous: fail only when worse
+  than ``TIME_BAND`` x baseline (direction-aware: ``*_per_s`` is
+  higher-is-better, the rest lower-is-better). Improvements always pass
+  and are reported so baselines can be re-pinned.
+* **numerical error** (``*err*``) — fail above ``ERR_BAND`` x baseline
+  (+ eps): kernel accuracy must not quietly degrade.
+* **bytes** (``*bytes*`` ints) — 2% relative band (checkpoint manifests
+  carry a few variable-length fields); all other ints and bools/strings
+  are exact — parity flags, page counts, trace counts and row identities
+  are deterministic claims, not measurements.
+* **other floats** — 25% relative band (utilization ratios, fractions).
+
+A key present in the baseline but missing from the fresh artifact is a
+coverage regression and fails; new keys in the fresh artifact pass (they
+are picked up on the next ``--update``). Rows in ``rows``/``engines``
+containers are matched by their ``name``/``mode`` identity when present.
+
+Usage::
+
+    python benchmarks/perf_gate.py            # gate (exit 1 on regression)
+    python benchmarks/perf_gate.py --update   # pin current artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Any, List, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
+ARTIFACTS = ("BENCH_kernels.json", "BENCH_serving.json", "BENCH_train.json")
+
+TIME_BAND = 5.0  # fail when a wall-time metric is > 5x worse than baseline
+ERR_BAND = 4.0  # fail when a kernel-error metric is > 4x worse
+BYTES_TOL = 0.02
+FLOAT_TOL = 0.25
+
+_TIME_MARKERS = ("us_", "_ms", "ms_", "per_s", "_blocked", "restore_ms")
+_HIGHER_BETTER = ("per_s",)
+
+
+def _is_timing(key: str) -> bool:
+    return any(m in key for m in _TIME_MARKERS)
+
+
+def _rel_worse(key: str, base: float, fresh: float) -> float:
+    """How many x worse ``fresh`` is than ``base`` (1.0 = equal, <1 =
+    improved), respecting the metric's direction."""
+    if base <= 0 or fresh <= 0:
+        return 1.0 if fresh == base else float("inf")
+    if any(m in key for m in _HIGHER_BETTER):
+        return base / fresh
+    return fresh / base
+
+
+def _match_rows(base_rows: list, fresh_rows: list) -> List[Tuple[str, Any, Any]]:
+    """Pair rows by 'name'/'mode' identity when available, else by index.
+    Baseline rows with no fresh counterpart pair with None (a failure)."""
+    def ident(r, i):
+        if isinstance(r, dict):
+            for k in ("name", "mode"):
+                if k in r:
+                    return str(r[k])
+        return f"[{i}]"
+
+    fresh_by_id = {ident(r, i): r for i, r in enumerate(fresh_rows)}
+    return [
+        (ident(r, i), r, fresh_by_id.get(ident(r, i)))
+        for i, r in enumerate(base_rows)
+    ]
+
+
+def compare(base: Any, fresh: Any, path: str, failures: List[str],
+            notes: List[str]) -> None:
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            failures.append(f"{path}: baseline is a mapping, fresh is "
+                            f"{type(fresh).__name__}")
+            return
+        for k, bv in base.items():
+            sub = f"{path}.{k}" if path else k
+            if k not in fresh:
+                failures.append(f"{sub}: metric disappeared from artifact")
+                continue
+            compare(bv, fresh[k], sub, failures, notes)
+        for k in fresh.keys() - base.keys():
+            notes.append(f"{path}.{k}: new metric (pass; pin via --update)")
+        return
+    if isinstance(base, list):
+        if not isinstance(fresh, list):
+            failures.append(f"{path}: baseline is a list, fresh is "
+                            f"{type(fresh).__name__}")
+            return
+        for rid, brow, frow in _match_rows(base, fresh):
+            sub = f"{path}[{rid}]"
+            if frow is None:
+                failures.append(f"{sub}: row disappeared from artifact")
+                continue
+            compare(brow, frow, sub, failures, notes)
+        return
+    key = path.rsplit(".", 1)[-1]
+    if isinstance(base, bool) or isinstance(base, str) or base is None:
+        if fresh != base:
+            failures.append(f"{path}: {base!r} -> {fresh!r} (exact metric)")
+        return
+    if not isinstance(base, (int, float)) or not isinstance(fresh, (int, float)):
+        failures.append(f"{path}: type changed {type(base).__name__} -> "
+                        f"{type(fresh).__name__}")
+        return
+    if _is_timing(key):
+        worse = _rel_worse(key, float(base), float(fresh))
+        if worse > TIME_BAND:
+            failures.append(
+                f"{path}: {base} -> {fresh} ({worse:.1f}x worse, band "
+                f"{TIME_BAND}x)"
+            )
+        elif worse < 1 / 1.5:
+            notes.append(f"{path}: improved {1 / worse:.1f}x "
+                         f"({base} -> {fresh}); consider --update")
+        return
+    if "err" in key:
+        if float(fresh) > float(base) * ERR_BAND + 1e-9:
+            failures.append(f"{path}: error {base} -> {fresh} "
+                            f"(band {ERR_BAND}x)")
+        return
+    if isinstance(base, int) and not isinstance(base, bool):
+        if "bytes" in key:
+            if abs(fresh - base) > abs(base) * BYTES_TOL:
+                failures.append(f"{path}: {base} -> {fresh} bytes "
+                                f"(band {BYTES_TOL:.0%})")
+        elif fresh != base:
+            failures.append(f"{path}: {base} -> {fresh} (exact count)")
+        return
+    if abs(float(fresh) - float(base)) > abs(float(base)) * FLOAT_TOL + 1e-9:
+        failures.append(f"{path}: {base} -> {fresh} (band {FLOAT_TOL:.0%})")
+
+
+def gate(artifacts=ARTIFACTS, baseline_dir=BASELINE_DIR, root=ROOT,
+         verbose=True) -> List[str]:
+    failures: List[str] = []
+    notes: List[str] = []
+    for name in artifacts:
+        base_path = os.path.join(baseline_dir, name)
+        fresh_path = os.path.join(root, name)
+        if not os.path.exists(base_path):
+            failures.append(f"{name}: no committed baseline "
+                            f"(run perf_gate.py --update and commit)")
+            continue
+        if not os.path.exists(fresh_path):
+            failures.append(f"{name}: artifact was not generated")
+            continue
+        with open(base_path) as f:
+            base = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        compare(base, fresh, name, failures, notes)
+    if verbose:
+        for n in notes:
+            print(f"  note: {n}")
+        for fmsg in failures:
+            print(f"  FAIL: {fmsg}")
+    return failures
+
+
+def update(artifacts=ARTIFACTS, baseline_dir=BASELINE_DIR, root=ROOT) -> None:
+    os.makedirs(baseline_dir, exist_ok=True)
+    for name in artifacts:
+        src = os.path.join(root, name)
+        if not os.path.exists(src):
+            print(f"  skip {name}: not generated")
+            continue
+        shutil.copyfile(src, os.path.join(baseline_dir, name))
+        print(f"  pinned {name}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--update", action="store_true",
+                    help="pin the current BENCH_*.json as the new baselines")
+    args = ap.parse_args(argv)
+    if args.update:
+        update()
+        return 0
+    failures = gate()
+    if failures:
+        print(f"perf gate: {len(failures)} regression(s) vs committed "
+              f"baselines (benchmarks/baselines/)")
+        return 1
+    print("perf gate: all artifacts within tolerance of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,10 +18,23 @@ usual CSV/JSON via benchmarks.common) with, per engine:
 Asserted here (the acceptance gate): paged resident KV <= ring resident KV
 at equal batch, and greedy outputs token-for-token identical across
 engines.
+
+**Multi-device scaling section** (``"scaling"`` in the JSON): subprocess
+workers rerun a pool-bound paged workload on 1 / 2 / 4 fake CPU devices
+(``--xla_force_host_platform_device_count`` — device count locks at first
+jax init, hence subprocesses) through the mesh-aware engine, scaling the
+DP shard count with the device count plus one EP x DP topology (dp=2,
+ep=2) for the overlapped expert all-to-all. Per row: tokens/s, aggregate
+and per-device peak resident KV bytes, and the scheduler's peak
+concurrent-resident-request count. Asserted: >= 1.8x resident requests at
+2 devices vs 1, and EP decode parity (every topology emits exactly the
+single-device token streams).
 """
 import dataclasses
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -92,10 +105,132 @@ def drive(engine, requests):
     }, {r.rid: list(r.output) for r in requests}
 
 
-def main():
+# -- multi-device scaling (subprocess workers) -------------------------------
+# pool-bound workload: every request needs 5 pages (24-token prompt + 8 new
+# at page_size 8) and each DP shard's sub-pool holds 11, so exactly two
+# requests fit a shard concurrently — peak resident requests then scales
+# with the shard count, which is the aggregate-pool claim under test.
+SCALE_PROMPT, SCALE_NEW, SCALE_PPS = 24, 8, 11
+SCALE_TOPOLOGIES = [  # (devices, dp, ep)
+    (1, 1, 1),
+    (2, 2, 1),
+    (4, 4, 1),
+    (4, 2, 2),  # EP x DP: decode through the overlapped expert all-to-all
+]
+
+
+def _bench_cfg():
     cfg = smoke_config(get_config("llama3-e8t2")).replace(dtype="float32")
     # dropless so chunked prefill routing matches full prefill routing
-    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=None))
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=None))
+
+
+def scaling_worker(dp: int, ep: int) -> None:
+    """Run the pool-bound workload on a dp x ep serving mesh; prints one
+    JSON row (parsed by the parent from the last stdout line)."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.kv_cache import kv_bytes_resident_per_shard
+
+    cfg = _bench_cfg()
+    params = init_from_decls(model_decl(cfg), jax.random.PRNGKey(0))
+    engine = ServingEngine(
+        cfg, params, max_batch=4 * dp, max_seq=MAX_SEQ, cache_mode="paged",
+        page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+        num_pages=SCALE_PPS * dp, mesh=make_serving_mesh(dp, ep),
+    )
+    rng = np.random.default_rng(7)
+    requests = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, SCALE_PROMPT).astype(np.int32),
+                max_new_tokens=SCALE_NEW)
+        for i in range(N_REQ)
+    ]
+    for r in requests:
+        engine.submit(r)
+    per_shard_peak = [0] * engine.dp_shards
+    t0 = time.perf_counter()
+    while engine.sched.has_work:
+        engine.step()
+        for s, b in enumerate(kv_bytes_resident_per_shard(cfg, engine.page_pool)):
+            per_shard_peak[s] = max(per_shard_peak[s], b)
+    wall = time.perf_counter() - t0
+    engine.page_pool.check_invariants()
+    assert engine.page_pool.free_pages == engine.page_pool.num_pages, "pool leak"
+    kv = engine.kv_stats()
+    total = sum(len(r.output) for r in requests)
+    print(json.dumps({
+        "devices": dp * ep, "dp": dp, "ep": ep,
+        "dispatcher": engine.cfg.moe.dispatcher,
+        "tokens": total,
+        "tokens_per_s": round(total / wall, 2),
+        "kv_bytes_resident_peak": int(kv["kv_bytes_peak"]),
+        "kv_bytes_resident_per_shard_peak": per_shard_peak,
+        "peak_resident_requests": int(kv["peak_resident_requests"]),
+        "outputs": {str(r.rid): list(map(int, r.output)) for r in requests},
+    }))
+
+
+def run_scaling():
+    """Launch one subprocess per topology and build the ``scaling`` report
+    section (the parent process has already initialized jax at one device,
+    so fake-device runs must be fresh processes)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows = []
+    for devices, dp, ep in SCALE_TOPOLOGIES:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={devices}"
+        ).strip()
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in [os.path.join(root, "src"), root,
+                        env.get("PYTHONPATH", "")] if p
+        )
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--scaling-worker", str(dp), str(ep)],
+            capture_output=True, text=True, env=env, cwd=root, timeout=1800,
+        )
+        assert proc.returncode == 0, (
+            f"scaling worker dp={dp} ep={ep} failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+        rows.append(json.loads(proc.stdout.strip().splitlines()[-1]))
+        r = rows[-1]
+        print(f"  scaling dp={dp} ep={ep}: {r['tokens_per_s']} tok/s, "
+              f"peak resident requests {r['peak_resident_requests']}, "
+              f"peak KV/shard {r['kv_bytes_resident_per_shard_peak']}")
+
+    base = next(r for r in rows if r["devices"] == 1)
+    two = next(r for r in rows if r["devices"] == 2)
+    ratio = two["peak_resident_requests"] / max(base["peak_resident_requests"], 1)
+    assert ratio >= 1.8, (
+        f"2-device aggregate pool admitted only {ratio:.2f}x the resident "
+        f"requests of 1 device (need >= 1.8x)"
+    )
+    for r in rows:
+        # no single shard's peak exceeds the aggregate peak, and EP x DP
+        # decode emits exactly the single-device token streams
+        assert max(r["kv_bytes_resident_per_shard_peak"]) <= r[
+            "kv_bytes_resident_peak"
+        ], r
+        r["ep_decode_parity"] = r["outputs"] == base["outputs"]
+        assert r["ep_decode_parity"], f"decode parity broken at dp={r['dp']} ep={r['ep']}"
+    for r in rows:
+        del r["outputs"]  # bulky; parity already folded into the flag
+    return {
+        "workload": {
+            "requests": N_REQ, "prompt_len": SCALE_PROMPT,
+            "max_new": SCALE_NEW, "pages_per_shard": SCALE_PPS,
+            "page_size": PAGE_SIZE, "prefill_chunk": PREFILL_CHUNK,
+        },
+        "rows": rows,
+        "resident_requests_scaling_2dev": round(ratio, 2),
+    }
+
+
+def main():
+    cfg = _bench_cfg()
     params = init_from_decls(model_decl(cfg), jax.random.PRNGKey(0))
 
     rows, outputs = [], {}
@@ -132,13 +267,22 @@ def main():
         "parity_token_for_token": parity,
         "kv_bytes_saved": ring["kv_bytes_resident"] - paged["kv_bytes_resident"],
     }
+    if "--skip-scaling" not in sys.argv:
+        print("multi-device scaling (subprocess workers)...")
+        report["scaling"] = run_scaling()
     with open(ROOT_JSON, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {ROOT_JSON}")
     print(f"paged pins {paged['kv_bytes_resident']/1e6:.2f} MB peak vs ring "
           f"{ring['kv_bytes_resident']/1e6:.2f} MB "
           f"({report['kv_bytes_saved']/1e6:.2f} MB saved), parity={parity}")
+    if "scaling" in report:
+        print(f"resident-request scaling at 2 devices: "
+              f"{report['scaling']['resident_requests_scaling_2dev']}x")
 
 
 if __name__ == "__main__":
-    main()
+    if len(sys.argv) >= 4 and sys.argv[1] == "--scaling-worker":
+        scaling_worker(int(sys.argv[2]), int(sys.argv[3]))
+    else:
+        main()

@@ -35,9 +35,16 @@ class MoEConfig:
         CF-bounded token dropping (Megatron-Core dispatcher #1, §3.2).
       * ``alltoall``  — shard_map + lax.all_to_all over the EP axis
         (dispatcher #2; preferred for small top-k, per the paper).
+      * ``a2a_overlap`` — alltoall with the exchange split into double-
+        buffered ppermute rounds that overlap expert compute (the serving
+        decode schedule; same legality preconditions as alltoall).
       * ``sorted``    — argsort token permutation into a flat (T*k, D)
         expert-sorted buffer + per-expert group sizes (MegaBlocks-style);
         true dropless. Recommended with ``capacity_factor=None``.
+    ``strict_dispatch``: raise instead of silently falling back to
+    allgather when an EP dispatcher's preconditions fail — set by the
+    mesh-mode serving engine, where the fallback forfeits expert
+    parallelism without any visible signal.
     """
 
     num_experts: int = 8
@@ -47,13 +54,14 @@ class MoEConfig:
     noisy_gating: bool = False  # Eq. (3) noisy top-k; off in paper main runs
     aux_loss_coef: float = 1e-2  # Switch-style load balance loss
     z_loss_coef: float = 1e-3  # router z-loss
-    dispatcher: str = "allgather"  # allgather | alltoall | sorted
+    dispatcher: str = "allgather"  # allgather | alltoall | a2a_overlap | sorted
+    strict_dispatch: bool = False  # error (not fallback) on illegal EP dispatch
     expert_d_ff: int = 0  # per-expert FFN hidden size (0 -> use model d_ff)
     moe_layer_freq: int = 1  # MoE every k-th layer (jamba: 2)
     dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
     router_dtype: str = "float32"
 
-    DISPATCHERS = ("allgather", "alltoall", "sorted")
+    DISPATCHERS = ("allgather", "alltoall", "a2a_overlap", "sorted")
 
     def __post_init__(self):
         assert self.dispatcher in self.DISPATCHERS, self.dispatcher

@@ -7,13 +7,19 @@ Three dispatchers (select via ``MoEConfig.dispatcher``):
   CF-bounded token dropping. Default; works on any mesh.
 * ``alltoall``  — shard_map + lax.all_to_all over the EP axis (preferred
   for small top-k per paper §3.2); padded layout, needs an EP plan.
+* ``a2a_overlap`` — alltoall with the exchange decomposed into double-
+  buffered ppermute rounds so it overlaps expert compute (the serving
+  decode schedule); same legality preconditions as alltoall.
 * ``sorted``    — argsort token permutation into a flat (T*k, D)
   expert-sorted buffer + per-expert group_sizes; true dropless with no
   C = T padding blow-up. Recommended for ``capacity_factor=None`` runs.
 
 ``get_dispatcher`` applies the legality fallbacks (expert-choice routing
 needs the full-probability tables -> allgather; alltoall needs an EP plan
-and divisible token shards).
+and divisible token shards). Falling back from an EP dispatcher emits a
+warning naming the offending shapes; with ``MoEConfig.strict_dispatch``
+(set by the mesh-mode serving engine, where the fallback would silently
+forfeit the EP win) it raises instead.
 """
 from __future__ import annotations
 
@@ -23,7 +29,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core.dispatch.allgather import AllGatherDispatcher
-from repro.core.dispatch.alltoall import AllToAllDispatcher
+from repro.core.dispatch.alltoall import AllToAllDispatcher, OverlapAllToAllDispatcher
 from repro.core.dispatch.base import (
     DispatchLayout,
     DispatchState,
@@ -40,6 +46,7 @@ from repro.sharding.rules import FoldingPlan
 DISPATCHERS = {
     "allgather": AllGatherDispatcher,
     "alltoall": AllToAllDispatcher,
+    "a2a_overlap": OverlapAllToAllDispatcher,
     "sorted": SortedDispatcher,
 }
 
@@ -69,20 +76,39 @@ def get_dispatcher(
             "dropping). Use a padded dispatcher for CF semantics.",
             stacklevel=2,
         )
-    if name == "alltoall":
-        ok = (
-            moe.router_type != "expert_choice"  # EC gates are (T, E)
-            and plan is not None
-            and plan.moe_mode == "ep"
-            and total_tokens
-            % int(
-                np.prod(
-                    [plan.mesh.shape[a] for a in tuple(plan.batch_axes) + (plan.ep_axis,)]
-                )
-            )
-            == 0
+    if name in ("alltoall", "a2a_overlap"):
+        shards = (
+            int(np.prod([
+                plan.mesh.shape[a]
+                for a in tuple(plan.batch_axes) + (plan.ep_axis,)
+            ]))
+            if plan is not None and plan.ep_axis is not None
+            else None
         )
-        if not ok:
+        reason = None
+        if moe.router_type == "expert_choice":
+            reason = "expert_choice routing needs the full (T, E) gate table"
+        elif plan is None or plan.moe_mode != "ep":
+            reason = (
+                f"no EP plan (plan={'None' if plan is None else plan.moe_mode!r})"
+            )
+        elif total_tokens % shards != 0:
+            reason = (
+                f"token count {total_tokens} not divisible by the "
+                f"token-shard product {shards} (batch_axes="
+                f"{plan.batch_axes}, ep_axis={plan.ep_axis!r}, "
+                f"mesh={dict(plan.mesh.shape)})"
+            )
+        if reason is not None:
+            msg = (
+                f"dispatcher {name!r} is illegal here — {reason}; "
+                "falling back to 'allgather'. In serving mode this fallback "
+                "silently forfeits the EP win: pad the batch to the "
+                "token-shard product or pick a legal dispatcher."
+            )
+            if getattr(moe, "strict_dispatch", False):
+                raise ValueError(msg)
+            warnings.warn(msg, stacklevel=2)
             name = "allgather"
     if name == "allgather":
         return AllGatherDispatcher(
@@ -98,6 +124,7 @@ __all__ = [
     "TokenDispatcher",
     "AllGatherDispatcher",
     "AllToAllDispatcher",
+    "OverlapAllToAllDispatcher",
     "SortedDispatcher",
     "capacity",
     "dispatch_tables",

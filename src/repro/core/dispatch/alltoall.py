@@ -1,11 +1,27 @@
-"""AllToAll token dispatcher (shard_map + ``lax.all_to_all`` over the EP
-axis; preferred for small top-k, per the paper §3.2 practice #2).
+"""AllToAll token dispatchers (shard_map over the EP axis; preferred for
+small top-k, per the paper §3.2 practice #2).
 
 Each token shard builds its local dispatch tables, sends capacity-sized
 slot blocks to the shards owning the target experts, and the combine
 reverses the exchange. Requires an EP plan (``plan.moe_mode == "ep"``) and
 a token count divisible by the token-shard product; `get_dispatcher` falls
-back to allgather otherwise.
+back to allgather otherwise (loudly — and serving mode treats the fallback
+as a config error, see ``MoEConfig.strict_dispatch``).
+
+Two exchange schedules over the same dispatch tables:
+
+* :class:`AllToAllDispatcher` (``"alltoall"``) — one monolithic
+  ``lax.all_to_all`` each way. The whole exchange must complete before any
+  expert FFN row is computed, so dispatch latency is fully exposed.
+* :class:`OverlapAllToAllDispatcher` (``"a2a_overlap"``) — the exchange is
+  decomposed into ``ep - 1`` shifted ``lax.ppermute`` rounds, double-
+  buffered against expert compute: the block exchanged in round ``r`` has
+  no data dependence on the FFN of round ``r - 1``, so the compiler's async
+  collectives (``collective-permute-start``/``-done`` on TPU) run each hop
+  while the previous block's grouped GEMM executes. This is the serving
+  decode schedule — the paper's overlapped-dispatch practice (§3.2) —
+  where hiding the all-to-all behind attention/FFN compute is what keeps
+  EP decode latency dense-like.
 """
 from __future__ import annotations
 
@@ -83,11 +99,11 @@ class AllToAllDispatcher(TokenDispatcher):
         w_specs = jax.tree.map(lambda _: P(ep_axis, None, None), experts)
 
         def local_moe(x_l, gates_l, idx_l, experts_l):
-            xe, state = self.dispatch(
-                x_l, idx_l, gates_l, E=E, C=C, ep=ep, E_loc=E_loc, ep_axis=ep_axis
+            return self._local_pipeline(
+                x_l, gates_l, idx_l, experts_l,
+                E=E, C=C, ep=ep, E_loc=E_loc, ep_axis=ep_axis,
+                use_kernel=use_kernel,
             )
-            ye = expert_ffn(experts_l, xe[None], state.layout, use_kernel)[0]
-            return self.combine(ye, state)
 
         fn = shard_map(
             local_moe,
@@ -99,3 +115,61 @@ class AllToAllDispatcher(TokenDispatcher):
             check_rep=False,
         )
         return fn(x, gates, idx, experts)
+
+    def _local_pipeline(self, x_l, gates_l, idx_l, experts_l, *,
+                        E, C, ep, E_loc, ep_axis, use_kernel):
+        """Per-shard dispatch -> expert FFN -> combine (inside shard_map).
+        Subclasses override this to change the exchange schedule."""
+        xe, state = self.dispatch(
+            x_l, idx_l, gates_l, E=E, C=C, ep=ep, E_loc=E_loc, ep_axis=ep_axis
+        )
+        ye = expert_ffn(experts_l, xe[None], state.layout, use_kernel)[0]
+        return self.combine(ye, state)
+
+
+class OverlapAllToAllDispatcher(AllToAllDispatcher):
+    """Double-buffered ring schedule: the all-to-all is decomposed into
+    ``ep - 1`` shifted ``ppermute`` hops, each independent of the expert
+    FFN on the previously received block, so exchange and compute overlap.
+
+    Round ``r`` (0 <= r < ep): shard ``i`` sends the slot block destined to
+    shard ``(i + r) % ep`` directly to it (round 0 is the local block — no
+    exchange), runs the expert FFN on the block received from shard
+    ``(i - r) % ep``, and returns the previous round's result with the
+    inverse shift. Per-round blocks are ``(E_loc, C, D)`` — the padded
+    expert FFN is slot-wise, so chunking capacity by source shard is
+    numerically identical to the monolithic ``(E_loc, ep*C, D)`` GEMM."""
+
+    name = "a2a_overlap"
+
+    def _local_pipeline(self, x_l, gates_l, idx_l, experts_l, *,
+                        E, C, ep, E_loc, ep_axis, use_kernel):
+        T_loc, D = x_l.shape
+        sel, slot_gate = dispatch_tables(idx_l, gates_l, E, C)  # (E, C)
+        send = x_l[sel].reshape(ep, E_loc, C, D)  # [j] = slots for shard j
+        my = jax.lax.axis_index(ep_axis)
+        # rolled[r] = block destined to shard (my + r) % ep; round 0 local
+        rolled = jnp.roll(send, -my, axis=0)
+        layout = DispatchLayout("padded", E_loc, capacity=C)
+        outs = []
+        for r in range(ep):
+            if r == 0:
+                blk = rolled[0]
+            else:
+                blk = jax.lax.ppermute(
+                    rolled[r], ep_axis, [(i, (i + r) % ep) for i in range(ep)]
+                )  # arrives from shard (my - r) % ep: its slots for my experts
+            ye = expert_ffn(experts_l, blk[None], layout, use_kernel)[0]
+            if r == 0:
+                outs.append(ye)
+            else:
+                outs.append(jax.lax.ppermute(
+                    ye, ep_axis, [(i, (i - r) % ep) for i in range(ep)]
+                ))  # back to its source: my block processed by (my + r) % ep
+        # outs[r] holds results for global experts of shard (my + r) % ep;
+        # un-roll to expert-shard-major order matching ``sel``
+        ret = jnp.roll(jnp.stack(outs), my, axis=0).reshape(E, C, D)
+        ret = ret * slot_gate[..., None].astype(ret.dtype)
+        return jnp.zeros((T_loc, D), ret.dtype).at[
+            sel.reshape(E * C)
+        ].add(ret.reshape(E * C, D))

@@ -8,6 +8,9 @@ module constant, so importing this module never touches jax device state.
 by the Table-2 folding benchmarks, where the attention layers fold the
 'expert' axis into their data-parallel group while the MoE layers use it as
 EP (the paper's TP2CP2 <-> TP1EP8 example).
+
+``make_serving_mesh`` — EP x DP ('data', 'expert') mesh for the sharded
+serving engine (``ServingEngine(mesh=...)``).
 """
 from __future__ import annotations
 
@@ -41,3 +44,18 @@ def make_host_mesh() -> Mesh:
     """1x1 mesh on the real local device — used by tests/examples so the
     sharding code paths run identically at laptop scale."""
     return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def make_serving_mesh(dp: int = 1, ep: int = 1) -> Mesh:
+    """EP x DP serving mesh: ('data', 'expert') with ``dp * ep`` devices.
+    The 'data' axis shards the decode batch rows and the KV page pool (one
+    sub-pool stride per DP shard); 'expert' plays expert-parallel for the
+    MoE FFN weights and the decode all-to-all. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for CPU tests."""
+    n = dp * ep
+    devices = jax.devices()
+    assert len(devices) >= n, (
+        f"serving mesh dp={dp} x ep={ep} needs {n} devices; have "
+        f"{len(devices)} (set --xla_force_host_platform_device_count)"
+    )
+    return jax.make_mesh((dp, ep), ("data", "expert"), devices=devices[:n])

@@ -29,9 +29,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--dispatcher", default=None,
-        choices=["allgather", "alltoall", "sorted"],
-        help="MoE token dispatcher for decode (default: config's choice)",
+        choices=["allgather", "alltoall", "a2a_overlap", "sorted"],
+        help="MoE token dispatcher for decode (default: config's choice; "
+        "mesh mode defaults to the overlapped EP exchange)",
     )
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel shards (per-shard KV sub-pools)")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="expert-parallel shards for MoE decode")
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument(
         "--cache-mode", default="ring", choices=["ring", "paged"],
@@ -52,12 +57,17 @@ def main(argv=None):
         # serving demo drives the text path; image prefix handled at prefill
         cfg = cfg.replace(num_prefix_embeds=0, family="dense")
     params = init_from_decls(model_decl(cfg), jax.random.PRNGKey(args.seed))
+    mesh = None
+    if args.dp > 1 or args.ep > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.dp, args.ep)
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_seq=args.prompt_len + args.max_new + 8,
                            dispatcher=args.dispatcher, use_kernel=args.use_kernel,
                            cache_mode=args.cache_mode, page_size=args.page_size,
                            num_pages=args.num_pages,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk, mesh=mesh)
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),

@@ -203,7 +203,11 @@ def paged_stack_decl(cfg: ModelConfig, num_pages: int, page_size: int) -> Dict[s
     KV, hd)`` k/v pools shared by every sequence. By convention the LAST
     page (index ``num_pages - 1``) is the trash page — padded positions
     scatter there and it never appears in a block table; callers allocating
-    N usable pages must decl N + 1.
+    N usable pages must decl N + 1. Under EP x DP serving the pool is a
+    concatenation of per-DP-shard strides, each ending in its own trash
+    page (``serving.kv_cache.PagePool`` owns that layout; rows then pass a
+    per-row ``trash_page`` to :func:`paged_forward` so idle writes stay in
+    their shard's stride).
 
     Paged mode covers GQA attention stacks only (dense / moe / vlm-as-text
     families); MLA, SSM and cross-attention configs keep the ring cache."""
@@ -242,6 +246,7 @@ def paged_forward(
     page_table: jax.Array,  # (B, max_pages) int32 page ids, -1 = unassigned
     valid_len: jax.Array,  # (B,) real tokens in this chunk (0 = idle slot)
     use_kernel: bool = False,
+    trash_page: Optional[jax.Array] = None,  # (B,) per-row trash page id
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One forward over the page-table cache view: S > 1 is a prefill chunk
     (attends to previously-written pages + the chunk itself, causally),
@@ -251,13 +256,19 @@ def paged_forward(
 
     Writes for padded / idle positions are routed to the trash page, so the
     compiled step is shared across every request in a length bucket.
+    ``trash_page`` overrides the default last-page convention per row: the
+    EP x DP engine passes each batch row its DP shard's own trash page so
+    idle writes never cross the shard's stride of the page axis.
     Returns (fp32 logits (B, padded_vocab) at each row's last valid
     position, updated pool)."""
     B, S = tokens.shape
     leaf = jax.tree.leaves(pool["stack"])[0]  # (P, num_pages, ps, KV, hd)
     num_pages, ps = leaf.shape[1], leaf.shape[2]
     maxP = page_table.shape[1]
-    trash = num_pages - 1
+    trash = (
+        jnp.full((B, 1), num_pages - 1, jnp.int32)
+        if trash_page is None else trash_page.astype(jnp.int32)[:, None]
+    )
 
     positions = pos_start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     pvalid = jnp.arange(S, dtype=jnp.int32)[None, :] < valid_len[:, None]
@@ -302,6 +313,7 @@ def decode_step_paged(
     page_table: jax.Array,  # (B, max_pages)
     active: jax.Array,  # (B,) 1 for live slots, 0 for idle
     use_kernel: bool = False,
+    trash_page: Optional[jax.Array] = None,  # (B,) per-row trash page id
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Single-token paged decode: ``paged_forward`` with a length-1 chunk.
     Idle slots write to the trash page and emit garbage logits (ignored by
@@ -309,6 +321,7 @@ def decode_step_paged(
     return paged_forward(
         cfg, plan, params, pool, tokens[:, None], pos, page_table,
         active.astype(jnp.int32), use_kernel=use_kernel,
+        trash_page=trash_page,
     )
 
 

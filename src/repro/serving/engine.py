@@ -17,6 +17,19 @@ interchangeable KV cache backends.
 
 Greedy decode over both backends is token-for-token identical — pinned by
 ``tests/test_serving_paged.py``.
+
+**Mesh-aware (EP x DP) mode** — pass ``mesh=`` (paged mode only): the
+engine resolves a :class:`FoldingPlan`, shards the expert FFN weights over
+the plan's ``ep`` axis and the page pool / decode batch over the mesh batch
+('data') axes, and routes MoE decode through the overlapped expert
+all-to-all (``dispatcher="a2a_overlap"`` unless overridden) with
+``strict_dispatch`` set, so an illegal EP dispatch is a loud config error
+instead of a silent allgather fallback. Batch and chunk geometry are
+rounded up to the token-shard product the EP dispatchers shard over; the
+scheduler partitions batch slots and the page pool per DP shard
+(``SchedulerConfig.dp_shards``), with per-device resident-bytes accounting
+surfaced via :meth:`ServingEngine.kv_stats`. With a 1x1 mesh everything
+reduces to the single-host behavior bit-for-bit.
 """
 from __future__ import annotations
 
@@ -27,12 +40,14 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.config import ModelConfig, with_dispatcher
 from repro.models.model import (
     cache_decl,
     decode_step,
     decode_step_paged,
+    model_decl,
     paged_forward,
     prefill_forward,
 )
@@ -40,11 +55,16 @@ from repro.serving.kv_cache import (
     PagePool,
     init_paged_pool,
     kv_bytes_resident,
+    kv_bytes_resident_per_shard,
     permute_pool,
     ring_kv_bytes,
 )
 from repro.serving.scheduler import ChunkedScheduler, SchedulerConfig
-from repro.sharding.rules import FoldingPlan, ParamDecl
+from repro.sharding.rules import FoldingPlan, ParamDecl, shardings_from_decls
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
 
 
 @dataclasses.dataclass
@@ -73,13 +93,55 @@ class ServingEngine:
         num_pages: Optional[int] = None,
         prefill_chunk: int = 32,
         watermark: int = 0,
+        mesh: Optional[Mesh] = None,
     ):
         # MoE decode runs through the same dispatch subsystem as training;
         # `dispatcher` overrides the config's token dispatcher (e.g. "sorted"
         # for dropless decode), `use_kernel` enables the Pallas expert GEMMs
-        # and (paged mode) the paged-attention decode kernel.
+        # and (paged mode) the paged-attention decode kernel. `mesh` turns
+        # on the EP x DP sharded mode (see module docstring).
         assert cache_mode in ("ring", "paged"), cache_mode
         cfg = with_dispatcher(cfg, dispatcher)
+        self.mesh = mesh
+        self.dp_shards, self.ep_size = 1, 1
+        if mesh is not None:
+            assert cache_mode == "paged", (
+                "mesh-aware serving requires cache_mode='paged' (the ring "
+                "cache has no per-shard pool partition)"
+            )
+            if plan is None:
+                plan = FoldingPlan.make(cfg, mesh)
+            dp = max(1, int(np.prod([mesh.shape[a] for a in plan.batch_axes])))
+            self.dp_shards = dp
+            if cfg.moe is not None and plan.moe_mode == "ep":
+                self.ep_size = plan.ep_size
+                # decode must go through the EP exchange: default the
+                # padded-CF dispatchers to the overlapped schedule (same
+                # numerics, hidden exchange) and make any fallback a loud
+                # error. An explicit `dispatcher=` or a dropless 'sorted'
+                # config is left alone.
+                if dispatcher is None and cfg.moe.dispatcher in (
+                    "allgather", "alltoall"
+                ):
+                    cfg = with_dispatcher(cfg, "a2a_overlap")
+                if cfg.moe.dispatcher in ("alltoall", "a2a_overlap"):
+                    cfg = cfg.replace(moe=dataclasses.replace(
+                        cfg.moe, strict_dispatch=True
+                    ))
+            # decode token count = max_batch, prefill token count =
+            # prefill_chunk: both must divide over the token-shard product
+            tsp = dp * (
+                self.ep_size
+                if cfg.moe is not None
+                and cfg.moe.dispatcher in ("alltoall", "a2a_overlap")
+                else 1
+            )
+            max_batch = _round_up(max_batch, tsp)
+            prefill_chunk = _round_up(prefill_chunk, tsp)
+            # weights go to their folded placement (expert FFN over ep_axis)
+            params = jax.device_put(
+                params, shardings_from_decls(model_decl(cfg), plan)
+            )
         self.cfg, self.params, self.plan = cfg, params, plan
         self.max_batch, self.max_seq = max_batch, max_seq
         self.greedy = greedy
@@ -110,40 +172,53 @@ class ServingEngine:
     # -- paged backend setup ------------------------------------------------
     def _init_paged(self, page_size, num_pages, prefill_chunk, watermark):
         cfg = self.cfg
+        dp = self.dp_shards
         maxP = math.ceil(self.max_seq / page_size)
         if num_pages is None:
             # capacity parity with the ring cache; the memory win is that
             # only *allocated* pages count as resident
             num_pages = self.max_batch * maxP
+        num_pages = _round_up(num_pages, dp)  # equal per-shard sub-pools
         self.page_size, self.num_pages = page_size, num_pages
         self.prefill_chunk = prefill_chunk
-        self.pool_dev = init_paged_pool(cfg, num_pages, page_size)
-        self.page_pool = PagePool(num_pages, page_size)
+        self.pool_dev = init_paged_pool(
+            cfg, num_pages, page_size, num_shards=dp,
+            plan=self.plan if self.mesh is not None else None,
+        )
+        self.page_pool = PagePool(num_pages, page_size, num_shards=dp)
         self.sched = ChunkedScheduler(
             SchedulerConfig(
                 max_batch=self.max_batch, page_size=page_size,
                 prefill_chunk=prefill_chunk, max_pages_per_seq=maxP,
                 watermark=watermark, window=cfg.sliding_window,
+                dp_shards=dp,
             ),
             self.page_pool,
         )
         self._rid2req: Dict[int, Request] = {}
         self._next_np = np.zeros((self.max_batch,), np.int32)
         self.peak_used_pages = 0
+        # per-slot trash page: idle/padded writes of a batch row land in its
+        # own DP shard's trash so they never cross the pool's shard strides
+        # (at dp=1 this is the legacy last-device-page convention)
+        self._trash_np = np.array(
+            [self.page_pool.trash_page(self.sched.shard_of_slot(s))
+             for s in range(self.max_batch)], np.int32,
+        )
         # the pool operand is donated (as dryrun donates the decode cache):
         # the scatter updates in place instead of materializing a second
         # full-size pool every step
         self._chunk_fn = jax.jit(
-            lambda p, pool, t, s, bt, vl: paged_forward(
+            lambda p, pool, t, s, bt, vl, tr: paged_forward(
                 cfg, self.plan, p, pool, t, s, bt, vl,
-                use_kernel=self.use_kernel,
+                use_kernel=self.use_kernel, trash_page=tr,
             ),
             donate_argnums=(1,),
         )
         self._decode_paged = jax.jit(
-            lambda p, pool, t, pos, bt, a: decode_step_paged(
+            lambda p, pool, t, pos, bt, a, tr: decode_step_paged(
                 cfg, self.plan, p, pool, t, pos, bt, a,
-                use_kernel=self.use_kernel,
+                use_kernel=self.use_kernel, trash_page=tr,
             ),
             donate_argnums=(1,),
         )
@@ -252,6 +327,7 @@ class ServingEngine:
                 self.params, self.pool_dev, jnp.asarray(toks),
                 jnp.asarray([c.start], jnp.int32), bt,
                 jnp.asarray([c.length], jnp.int32),
+                jnp.asarray(self._trash_np[c.slot : c.slot + 1]),
             )
             if c.final:
                 tok = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
@@ -268,6 +344,7 @@ class ServingEngine:
             logits, self.pool_dev = self._decode_paged(
                 self.params, self.pool_dev, jnp.asarray(self._next_np),
                 jnp.asarray(pos), bt, jnp.asarray(active),
+                jnp.asarray(self._trash_np),
             )
             toks = np.asarray(
                 jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1), np.int32
@@ -306,17 +383,26 @@ class ServingEngine:
         return True
 
     def kv_stats(self) -> Dict[str, float]:
-        """Resident-KV accounting for the bench (both modes)."""
+        """Resident-KV accounting for the bench (both modes). In paged mode
+        the aggregate numbers are joined by per-DP-shard residency and the
+        scheduler's peak concurrent-resident-request count (the multi-device
+        scaling bench's headline metric)."""
         if self.cache_mode == "paged":
             from repro.serving.kv_cache import kv_page_bytes
 
             page_bytes = kv_page_bytes(self.cfg, self.page_size)
             return {
                 "kv_bytes_resident": kv_bytes_resident(self.cfg, self.page_pool),
+                "kv_bytes_resident_per_shard": kv_bytes_resident_per_shard(
+                    self.cfg, self.page_pool
+                ),
                 "kv_bytes_peak": self.peak_used_pages * page_bytes,
                 "page_utilization": self.page_pool.utilization(),
                 "peak_used_pages": self.peak_used_pages,
                 "num_pages": self.num_pages,
+                "peak_resident_requests": self.sched.peak_resident_requests,
+                "dp_shards": self.dp_shards,
+                "ep_size": self.ep_size,
             }
         return {
             "kv_bytes_resident": ring_kv_bytes(

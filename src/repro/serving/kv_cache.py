@@ -1,9 +1,17 @@
-"""Block-table KV cache: a fixed-size page pool shared by every sequence.
+"""Block-table KV cache: a fixed-size page pool shared by every sequence,
+optionally partitioned into per-DP-shard sub-pools.
 
-The device side is a per-layer ``(num_pages + 1, page_size, KV, hd)`` k/v
-pool (``models.model.paged_stack_decl``; the extra page is the trash page
-padded positions scatter into). The host side is :class:`PagePool` — a
-free-list allocator tracking which physical pages each request owns — plus
+The device side is a per-layer ``(num_shards * (pages_per_shard + 1),
+page_size, KV, hd)`` k/v pool (``models.model.paged_stack_decl``): each DP
+shard owns a contiguous stride of ``pages_per_shard`` usable pages plus its
+own trash page (the slot padded positions scatter into), so the page axis
+shards evenly over the mesh 'data' axis and every row's page gather stays
+within its shard's stride. With ``num_shards=1`` this reduces to the
+original single-host layout: ``num_pages + 1`` device pages, trash last.
+
+The host side is :class:`PagePool` — per-shard free-list allocators
+tracking which physical pages each request owns (a request's pages all
+come from ONE shard: its KV must be co-resident with its batch row) — plus
 per-slot block tables mapping logical page index -> physical page.
 
 Logical KV slot ``j`` of a request maps to
@@ -15,6 +23,9 @@ mask already excludes them, so the tokens are dead).
 Memory accounting (``kv_bytes_resident``) counts only pages actually
 allocated to live requests — the number the serving bench compares against
 the ring cache's ``max_batch * max_seq`` dense footprint.
+``kv_bytes_resident_per_shard`` splits it per device; the multi-device
+scaling bench checks the per-shard numbers sum to the aggregate and that
+aggregate residency grows with DP shard count.
 """
 from __future__ import annotations
 
@@ -27,32 +38,74 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.model import paged_stack_decl
-from repro.sharding.rules import ParamDecl
+from repro.sharding.rules import FoldingPlan, ParamDecl
 
 
 class PagePool:
-    """Host-side allocator over ``num_pages`` usable pages.
+    """Host-side allocator over ``num_pages`` usable pages, split into
+    ``num_shards`` equal sub-pools (``num_shards=1`` = single host).
+
+    Physical page ids are device indices: shard ``s`` owns the stride
+    ``[s * (pps + 1), s * (pps + 1) + pps)`` where ``pps = num_pages //
+    num_shards``; device index ``s * (pps + 1) + pps`` is shard ``s``'s
+    trash page and is never allocated. A request is pinned to the shard of
+    its first allocation; later allocations come from the same sub-pool.
 
     Invariants (asserted by :meth:`check_invariants` and exercised by the
     property suite): every page is either free or owned by exactly one
-    request; ``free_pages + sum(owned) == num_pages`` at all times; a
-    drained pool is fully free."""
+    request; ``free_pages + sum(owned) == num_pages`` at all times; every
+    page owned by a request lives in that request's shard; per-shard
+    used/free counts sum to the aggregate; a drained pool is fully free."""
 
-    def __init__(self, num_pages: int, page_size: int):
-        assert num_pages > 0 and page_size > 0
+    def __init__(self, num_pages: int, page_size: int, num_shards: int = 1):
+        assert num_pages > 0 and page_size > 0 and num_shards > 0
+        assert num_pages % num_shards == 0, (num_pages, num_shards)
         self.num_pages, self.page_size = num_pages, page_size
-        # stack with low ids on top so allocation order is deterministic
-        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.num_shards = num_shards
+        self.pages_per_shard = num_pages // num_shards
+        self._stride = self.pages_per_shard + 1  # usable pages + trash
+        # per-shard stacks with low ids on top: allocation order is
+        # deterministic and, at num_shards=1, identical to the original
+        # single-list pool (0, 1, 2, ...)
+        self._free: List[List[int]] = [
+            list(range(s * self._stride + self.pages_per_shard - 1,
+                       s * self._stride - 1, -1))
+            for s in range(num_shards)
+        ]
         self._owned: Dict[int, List[int]] = {}
+        self._shard_of: Dict[int, int] = {}  # rid -> pinned shard
 
     # -- queries ------------------------------------------------------------
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
 
     @property
     def used_pages(self) -> int:
-        return self.num_pages - len(self._free)
+        return self.num_pages - self.free_pages
+
+    @property
+    def device_pages(self) -> int:
+        """Device pool size along the page axis (usable + trash pages)."""
+        return self.num_shards * self._stride
+
+    def free_pages_in(self, shard: int) -> int:
+        return len(self._free[shard])
+
+    def used_pages_in(self, shard: int) -> int:
+        return self.pages_per_shard - len(self._free[shard])
+
+    def trash_page(self, shard: int) -> int:
+        """Device index of ``shard``'s trash page (writes for padded /
+        idle positions of that shard's rows land here)."""
+        return shard * self._stride + self.pages_per_shard
+
+    def shard_of_page(self, page: int) -> int:
+        return page // self._stride
+
+    def shard_of(self, rid: int) -> Optional[int]:
+        """Shard ``rid`` is pinned to (None before its first alloc)."""
+        return self._shard_of.get(rid)
 
     def pages_for(self, tokens: int) -> int:
         """Pages needed to hold ``tokens`` KV entries."""
@@ -65,64 +118,125 @@ class PagePool:
         return self.used_pages / self.num_pages
 
     # -- mutation -----------------------------------------------------------
-    def alloc(self, rid: int, n: int = 1) -> Optional[List[int]]:
-        """Allocate ``n`` pages for ``rid``; None (no partial effect) if the
-        pool cannot satisfy the request."""
-        if n < 0 or n > len(self._free):
+    def alloc(self, rid: int, n: int = 1, shard: int = 0) -> Optional[List[int]]:
+        """Allocate ``n`` pages for ``rid`` from ``shard``'s sub-pool; None
+        (no partial effect) if that sub-pool cannot satisfy the request. A
+        rid already holding pages must allocate from its pinned shard."""
+        pinned = self._shard_of.get(rid)
+        if pinned is not None:
+            assert shard == pinned, (rid, shard, pinned)
+        free = self._free[shard]
+        if n < 0 or n > len(free):
             return None
-        pages = [self._free.pop() for _ in range(n)]
+        pages = [free.pop() for _ in range(n)]
         self._owned.setdefault(rid, []).extend(pages)
+        self._shard_of[rid] = shard
         return pages
 
     def release(self, rid: int, pages: List[int]) -> None:
         """Return specific pages owned by ``rid`` (dead sliding-window
-        pages) to the free list."""
+        pages) to their shard's free list."""
         owned = self._owned.get(rid, [])
         for p in pages:
             owned.remove(p)  # raises if not owned — double-free is a bug
-            self._free.append(p)
+            self._free[self.shard_of_page(p)].append(p)
         if not owned and rid in self._owned:
             del self._owned[rid]
+            del self._shard_of[rid]
 
     def free_request(self, rid: int) -> int:
         """Free every page owned by ``rid``; returns how many."""
         pages = self._owned.pop(rid, [])
-        self._free.extend(pages)
+        self._shard_of.pop(rid, None)
+        for p in pages:
+            self._free[self.shard_of_page(p)].append(p)
         return len(pages)
 
     def defrag(self) -> Optional[Dict[int, int]]:
-        """Compact allocated pages into the low-index prefix. Returns the
-        {old_physical: new_physical} mapping (None if already compact); the
-        caller must apply it to the device pool (:func:`permute_pool`) and
-        every block table in the same step."""
-        allocated = sorted(p for pages in self._owned.values() for p in pages)
-        mapping = {old: new for new, old in enumerate(allocated) if old != new}
+        """Compact allocated pages into the low-index prefix of each
+        shard's stride (pages never migrate across shards — their KV lives
+        on that shard's device). Returns the {old_physical: new_physical}
+        mapping (None if already compact); the caller must apply it to the
+        device pool (:func:`permute_pool`) and every block table in the
+        same step."""
+        remap: Dict[int, int] = {}
+        alloc_per_shard: List[int] = []
+        for s in range(self.num_shards):
+            base = s * self._stride
+            allocated = sorted(
+                p for pages in self._owned.values() for p in pages
+                if self.shard_of_page(p) == s
+            )
+            alloc_per_shard.append(len(allocated))
+            for new, old in enumerate(allocated):
+                remap[old] = base + new
+        mapping = {old: new for old, new in remap.items() if old != new}
         if not mapping:
             return None
-        remap = {old: new for new, old in enumerate(allocated)}
         for pages in self._owned.values():
             pages[:] = [remap.get(p, p) for p in pages]
-        n = len(allocated)
-        self._free = list(range(self.num_pages - 1, n - 1, -1))
+        for s, n in enumerate(alloc_per_shard):
+            base = s * self._stride
+            self._free[s] = list(range(
+                base + self.pages_per_shard - 1, base + n - 1, -1
+            ))
         return mapping
 
     # -- invariants ---------------------------------------------------------
     def check_invariants(self) -> None:
         owned = [p for pages in self._owned.values() for p in pages]
+        flat_free = [p for f in self._free for p in f]
         assert len(owned) == len(set(owned)), "page double-assigned"
-        assert not set(owned) & set(self._free), "page both owned and free"
-        assert len(owned) + len(self._free) == self.num_pages, "page leaked"
-        assert all(0 <= p < self.num_pages for p in owned + self._free)
+        assert not set(owned) & set(flat_free), "page both owned and free"
+        assert len(owned) + len(flat_free) == self.num_pages, "page leaked"
+        trash = {self.trash_page(s) for s in range(self.num_shards)}
+        assert not trash & set(owned + flat_free), "trash page in circulation"
+        assert all(0 <= p < self.device_pages for p in owned + flat_free)
+        for rid, pages in self._owned.items():
+            s = self._shard_of[rid]
+            assert all(self.shard_of_page(p) == s for p in pages), (
+                f"request {rid} holds pages outside its shard {s}"
+            )
+        for s, f in enumerate(self._free):
+            assert all(self.shard_of_page(p) == s for p in f)
+        assert sum(self.used_pages_in(s) for s in range(self.num_shards)) \
+            == self.used_pages, "per-shard used counts do not sum to aggregate"
 
 
-def init_paged_pool(cfg: ModelConfig, num_pages: int, page_size: int):
-    """Zero-initialized device page pool with ``num_pages`` usable pages
-    (+1 trash page at the end, per the ``paged_stack_decl`` convention)."""
-    decls = paged_stack_decl(cfg, num_pages + 1, page_size)
-    return jax.tree.map(
+def init_paged_pool(
+    cfg: ModelConfig,
+    num_pages: int,
+    page_size: int,
+    num_shards: int = 1,
+    plan: Optional[FoldingPlan] = None,
+):
+    """Zero-initialized device page pool: ``num_pages`` usable pages split
+    into ``num_shards`` strides, each with its own trailing trash page (the
+    ``paged_stack_decl`` convention generalized; ``num_shards=1`` is the
+    original layout). With a ``plan``, the page axis is sharded over the
+    mesh batch axes so each DP shard's stride is device-resident locally —
+    aggregate HBM then bounds the pool, not one device's worth."""
+    assert num_pages % num_shards == 0, (num_pages, num_shards)
+    stride = num_pages // num_shards + 1
+    decls = paged_stack_decl(cfg, num_shards * stride, page_size)
+    pool = jax.tree.map(
         lambda d: jnp.zeros(d.shape, d.dtype), decls,
         is_leaf=lambda d: isinstance(d, ParamDecl),
     )
+    if plan is not None:
+        sh = pool_sharding(plan)
+        pool = jax.tree.map(lambda a: jax.device_put(a, sh), pool)
+    return pool
+
+
+def pool_sharding(plan: FoldingPlan):
+    """NamedSharding for pool leaves ``(P, pages, ps, KV, hd)``: the page
+    axis shards over the mesh batch axes (one stride per DP shard)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = plan.batch_axes
+    part = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return NamedSharding(plan.mesh, P(None, part, None, None, None))
 
 
 def permute_pool(pool, mapping: Dict[int, int]):
@@ -149,8 +263,16 @@ def kv_page_bytes(cfg: ModelConfig, page_size: int) -> int:
 
 
 def kv_bytes_resident(cfg: ModelConfig, pool: PagePool) -> int:
-    """KV bytes pinned by live requests (the paged-mode resident set)."""
+    """KV bytes pinned by live requests (the paged-mode resident set),
+    aggregated over every shard."""
     return pool.used_pages * kv_page_bytes(cfg, pool.page_size)
+
+
+def kv_bytes_resident_per_shard(cfg: ModelConfig, pool: PagePool) -> List[int]:
+    """Per-DP-shard resident KV bytes; sums to :func:`kv_bytes_resident`
+    (checked by the shard-accounting property suite)."""
+    pb = kv_page_bytes(cfg, pool.page_size)
+    return [pool.used_pages_in(s) * pb for s in range(pool.num_shards)]
 
 
 def ring_kv_bytes(cfg: ModelConfig, max_batch: int, cache_len: int) -> int:

@@ -7,7 +7,13 @@ call produces one engine step:
 * **admission**: FIFO from the queue into free batch slots, gated by the
   free-page budget (a request is admitted only if its whole prompt fits,
   plus ``watermark`` reserve pages — chunked prefill then spreads the
-  actual allocation over several steps).
+  actual allocation over several steps). Under ``dp_shards > 1`` the batch
+  slots are partitioned into contiguous blocks (one per DP shard, matching
+  the mesh 'data' sharding of the decode batch) and each shard owns one
+  sub-pool: the head request is placed into the free slot whose shard has
+  the largest free-page budget, so load balances across shard pools while
+  admission still reasons over the aggregate (a request blocked on every
+  shard blocks the queue, FIFO preserved).
 * **chunked prefill**: each prefilling slot contributes at most
   ``prefill_chunk`` prompt tokens per step, so a long prompt interleaves
   with decode instead of stalling the batch. The chunk length is static
@@ -20,7 +26,10 @@ call produces one engine step:
   always strictly younger than the request that needs the page, so the
   oldest request always makes progress and every submitted request
   terminates (provided the pool can hold one maximal request — enforced at
-  ``submit``).
+  ``submit``). With ``dp_shards > 1`` victims come from the *same shard*
+  as the starved request — only their pages live in that sub-pool — and
+  the termination argument applies per shard (each shard's oldest request
+  always progresses).
 * **sliding window**: with ``window`` set, pages that fall entirely below
   the window of every future query are released immediately — the window
   mask already excludes them, so paged decode holds O(window) KV per
@@ -43,8 +52,9 @@ class SchedulerConfig:
     page_size: int
     prefill_chunk: int
     max_pages_per_seq: int
-    watermark: int = 0  # free pages kept in reserve at admission
+    watermark: int = 0  # free pages kept in reserve at admission (per shard)
     window: Optional[int] = None  # sliding window: release dead pages
+    dp_shards: int = 1  # batch-slot/sub-pool partitions (EP x DP serving)
 
 
 @dataclasses.dataclass
@@ -93,13 +103,17 @@ class StepPlan:
 class ChunkedScheduler:
     def __init__(self, cfg: SchedulerConfig, pool: PagePool):
         assert pool.page_size == cfg.page_size
+        assert pool.num_shards == cfg.dp_shards, (pool.num_shards, cfg.dp_shards)
+        assert cfg.max_batch % cfg.dp_shards == 0, (cfg.max_batch, cfg.dp_shards)
         self.cfg = cfg
         self.pool = pool
+        self.slots_per_shard = cfg.max_batch // cfg.dp_shards
         self.queue: Deque[SchedRequest] = deque()
         self.running: Dict[int, SchedRequest] = {}  # slot -> request
         self.requests: Dict[int, SchedRequest] = {}  # rid -> request
         self.tables = np.full((cfg.max_batch, cfg.max_pages_per_seq), -1, np.int64)
         self._admit_counter = 0
+        self.peak_resident_requests = 0  # max concurrent running (bench)
 
     # -- submission ---------------------------------------------------------
     def submit(self, rid: int, prompt_len: int, max_new_tokens: int) -> None:
@@ -111,12 +125,14 @@ class ChunkedScheduler:
                 f"> max_pages_per_seq={self.cfg.max_pages_per_seq}"
             )
         # with a sliding window dead pages are released as decode advances,
-        # so the live set is bounded by the window span, not the total
+        # so the live set is bounded by the window span, not the total.
+        # A request lives entirely in one shard's sub-pool, so the bound is
+        # per-shard capacity, not the aggregate.
         live = self._live_bound(total)
-        if live > self.pool.num_pages:
+        if live > self.pool.pages_per_shard:
             raise ValueError(
-                f"request {rid}: needs {live} live pages > pool of "
-                f"{self.pool.num_pages}"
+                f"request {rid}: needs {live} live pages > per-shard pool "
+                f"of {self.pool.pages_per_shard}"
             )
         req = SchedRequest(
             rid=rid, prompt_len=prompt_len, max_new_tokens=max_new_tokens,
@@ -133,10 +149,18 @@ class ChunkedScheduler:
     def block_table(self, slot: int) -> np.ndarray:
         return self.tables[slot]
 
+    def shard_of_slot(self, slot: int) -> int:
+        """DP shard owning ``slot``: contiguous slot blocks, matching the
+        mesh 'data' sharding of the decode batch rows."""
+        return slot // self.slots_per_shard
+
     # -- planning -----------------------------------------------------------
     def plan(self) -> StepPlan:
         preempted: List[int] = []
         self._admit()
+        self.peak_resident_requests = max(
+            self.peak_resident_requests, len(self.running)
+        )
         prefills: List[PrefillChunk] = []
         # oldest first, so page pressure evicts the newest work
         for slot, req in sorted(self.running.items(), key=lambda kv: kv[1].admit_seq):
@@ -196,23 +220,40 @@ class ChunkedScheduler:
                 return
             req = self.queue[0]
             need = self._live_bound(req.prompt_len)
-            # pages already promised to admitted-but-still-prefilling
+            # Pages already promised to admitted-but-still-prefilling
             # requests count against the budget, so two large prompts
-            # cannot both be admitted into the same free pool. An idle
-            # engine waives the watermark — a request that fits the raw
-            # pool must always be admittable (deadlock avoidance).
-            committed = sum(
-                max(0, self._live_bound(r.prompt_len) - len(self.pool.owned(r.rid)))
-                for r in self.running.values() if r.in_prefill
-            )
-            reserve = self.cfg.watermark + committed if self.running else 0
-            if self.pool.free_pages - reserve < need:
+            # cannot both be admitted into the same free sub-pool. An idle
+            # shard waives the watermark — a request that fits its raw
+            # sub-pool must always be admittable (deadlock avoidance).
+            # Budgets are per shard; the head request takes the free slot
+            # whose shard has the most headroom (ties -> lowest slot, which
+            # at dp_shards=1 is exactly the original FIFO slot choice).
+            best_slot, best_budget = None, None
+            for slot in free_slots:
+                budget = self._shard_budget(self.shard_of_slot(slot))
+                if best_budget is None or budget > best_budget:
+                    best_slot, best_budget = slot, budget
+            if best_budget < need:
                 return  # head-of-line blocking preserves FIFO order
             self.queue.popleft()
-            req.slot = free_slots[0]
+            req.slot = best_slot
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
             self.running[req.slot] = req
+
+    def _shard_budget(self, shard: int) -> int:
+        """Free pages of ``shard``'s sub-pool minus its admission reserve
+        (watermark + pages committed to still-prefilling residents)."""
+        residents = [
+            r for r in self.running.values()
+            if self.shard_of_slot(r.slot) == shard
+        ]
+        committed = sum(
+            max(0, self._live_bound(r.prompt_len) - len(self.pool.owned(r.rid)))
+            for r in residents if r.in_prefill
+        )
+        reserve = self.cfg.watermark + committed if residents else 0
+        return self.pool.free_pages_in(shard) - reserve
 
     def _live_bound(self, tokens: int) -> int:
         """Peak live pages a span of ``tokens`` can pin. With a sliding
@@ -227,22 +268,29 @@ class ChunkedScheduler:
 
     def _ensure_pages(self, req: SchedRequest, upto_tokens: int,
                       preempted: List[int]) -> bool:
-        """Allocate pages so logical slots [0, upto_tokens) are mapped,
-        evicting strictly-younger requests if the pool runs dry. False if
-        the request must stall this step."""
+        """Allocate pages (from ``req``'s shard sub-pool) so logical slots
+        [0, upto_tokens) are mapped, evicting strictly-younger same-shard
+        requests if that sub-pool runs dry. False if the request must stall
+        this step."""
         need = self.pool.pages_for(upto_tokens)
+        shard = self.shard_of_slot(req.slot)
         while need > req.logical_pages:
             n_new = need - req.logical_pages
-            pages = self.pool.alloc(req.rid, n_new)
+            pages = self.pool.alloc(req.rid, n_new, shard=shard)
             if pages is None:
-                victim = self._youngest_running(older_than=req)
+                victim = self._youngest_running(older_than=req, shard=shard)
                 if victim is None:
-                    if req.admit_seq == min(
+                    sh_seqs = [
                         r.admit_seq for r in self.running.values()
-                    ) and self.pool.used_pages == len(self.pool.owned(req.rid)):
+                        if self.shard_of_slot(r.slot) == shard
+                    ]
+                    if req.admit_seq == min(sh_seqs) and (
+                        self.pool.used_pages_in(shard)
+                        == len(self.pool.owned(req.rid))
+                    ):
                         raise RuntimeError(
-                            f"page pool ({self.pool.num_pages}) too small for "
-                            f"request {req.rid} alone"
+                            f"page pool shard ({self.pool.pages_per_shard} "
+                            f"pages) too small for request {req.rid} alone"
                         )
                     return False
                 self._preempt(victim)
@@ -253,9 +301,14 @@ class ChunkedScheduler:
             req.logical_pages = need
         return True
 
-    def _youngest_running(self, older_than: SchedRequest) -> Optional[SchedRequest]:
+    def _youngest_running(self, older_than: SchedRequest,
+                          shard: int) -> Optional[SchedRequest]:
+        """Youngest running request in ``shard`` strictly younger than
+        ``older_than`` — only its pages can relieve that shard's pool."""
         cands = [
-            r for r in self.running.values() if r.admit_seq > older_than.admit_seq
+            r for r in self.running.values()
+            if r.admit_seq > older_than.admit_seq
+            and self.shard_of_slot(r.slot) == shard
         ]
         return max(cands, key=lambda r: r.admit_seq) if cands else None
 

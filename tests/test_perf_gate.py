@@ -1,0 +1,95 @@
+"""Perf-gate unit tests: the tolerance-band diff that CI runs over the
+BENCH artifacts. Pure JSON-in/JSON-out — no model, no benches."""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.perf_gate import compare, gate, update  # noqa: E402
+
+
+def diff(base, fresh):
+    failures, notes = [], []
+    compare(base, fresh, "t", failures, notes)
+    return failures, notes
+
+
+def test_timing_band_is_generous_but_bounded():
+    base = {"us_fwd_xla_ref": 100.0, "tokens_per_s": 20.0}
+    ok, _ = diff(base, {"us_fwd_xla_ref": 300.0, "tokens_per_s": 10.0})
+    assert not ok  # 3x slower / 2x less throughput: inside the CPU band
+    bad, _ = diff(base, {"us_fwd_xla_ref": 600.0, "tokens_per_s": 20.0})
+    assert len(bad) == 1 and "us_fwd_xla_ref" in bad[0]
+    bad, _ = diff(base, {"us_fwd_xla_ref": 100.0, "tokens_per_s": 3.0})
+    assert len(bad) == 1 and "tokens_per_s" in bad[0]
+    # improvements always pass, and big ones are surfaced as notes
+    ok, notes = diff(base, {"us_fwd_xla_ref": 10.0, "tokens_per_s": 200.0})
+    assert not ok and len(notes) == 2
+
+
+def test_exact_metrics_and_counts():
+    base = {"parity_token_for_token": True, "prefill_traces": 3,
+            "peak_resident_requests": 6, "mode": "paged"}
+    assert not diff(base, dict(base))[0]
+    for k, v in [("parity_token_for_token", False), ("prefill_traces", 4),
+                 ("peak_resident_requests", 5), ("mode", "ring")]:
+        fresh = dict(base)
+        fresh[k] = v
+        bad, _ = diff(base, fresh)
+        assert len(bad) == 1 and k in bad[0], (k, bad)
+
+
+def test_bytes_band_and_error_band():
+    base = {"ckpt_bytes": 1000, "kernel_max_err": 1e-3}
+    assert not diff(base, {"ckpt_bytes": 1015, "kernel_max_err": 2e-3})[0]
+    bad, _ = diff(base, {"ckpt_bytes": 1500, "kernel_max_err": 1e-3})
+    assert len(bad) == 1 and "ckpt_bytes" in bad[0]
+    bad, _ = diff(base, {"ckpt_bytes": 1000, "kernel_max_err": 1e-2})
+    assert len(bad) == 1 and "kernel_max_err" in bad[0]
+
+
+def test_missing_metric_fails_new_metric_passes():
+    base = {"rows": [{"name": "a", "gemm_rows": 8}]}
+    bad, _ = diff(base, {"rows": [{"name": "a"}]})
+    assert any("gemm_rows" in f and "disappeared" in f for f in bad)
+    bad, _ = diff(base, {"rows": []})
+    assert any("row disappeared" in f for f in bad)
+    ok, notes = diff(base, {"rows": [{"name": "a", "gemm_rows": 8,
+                                     "new_metric": 1.0}]})
+    assert not ok and any("new_metric" in n for n in notes)
+
+
+def test_rows_match_by_identity_not_index():
+    base = {"rows": [{"name": "a", "gemm_rows": 1}, {"name": "b", "gemm_rows": 2}]}
+    fresh = {"rows": [{"name": "b", "gemm_rows": 2}, {"name": "a", "gemm_rows": 1}]}
+    assert not diff(base, fresh)[0]
+
+
+def test_gate_roundtrip_and_missing_baseline(tmp_path):
+    root = tmp_path / "root"
+    bdir = tmp_path / "baselines"
+    root.mkdir()
+    art = ("BENCH_x.json",)
+    (root / "BENCH_x.json").write_text(json.dumps(
+        {"tokens_per_s": 10.0, "parity": True}))
+    fails = gate(art, str(bdir), str(root), verbose=False)
+    assert any("no committed baseline" in f for f in fails)
+    update(art, str(bdir), str(root))
+    assert gate(art, str(bdir), str(root), verbose=False) == []
+    (root / "BENCH_x.json").write_text(json.dumps(
+        {"tokens_per_s": 1.0, "parity": True}))
+    fails = gate(art, str(bdir), str(root), verbose=False)
+    assert len(fails) == 1 and "tokens_per_s" in fails[0]
+
+
+def test_committed_baselines_cover_all_artifacts():
+    """The repo ships a baseline for every gated artifact (the CI step
+    fails closed otherwise)."""
+    from benchmarks.perf_gate import ARTIFACTS, BASELINE_DIR
+
+    for name in ARTIFACTS:
+        assert os.path.exists(os.path.join(BASELINE_DIR, name)), name

@@ -22,9 +22,15 @@ except ImportError:
 
 def _check_tables(sched: ChunkedScheduler) -> None:
     """Every block-table entry maps to a page the slot's request owns, and
-    no physical page appears in two tables (no double-assign)."""
+    no physical page appears in two tables (no double-assign). Under
+    ``dp_shards > 1`` each resident request is pinned to its slot's shard."""
     seen = {}
     for slot, req in sched.running.items():
+        pinned = sched.pool.shard_of(req.rid)
+        assert pinned in (None, sched.shard_of_slot(slot)), (
+            f"slot {slot} (shard {sched.shard_of_slot(slot)}) holds request "
+            f"{req.rid} pinned to shard {pinned}"
+        )
         owned = set(sched.pool.owned(req.rid))
         row = sched.tables[slot]
         live = row[row >= 0]
@@ -40,22 +46,25 @@ def _check_tables(sched: ChunkedScheduler) -> None:
 
 
 def simulate(seed, num_pages=12, ps=4, max_batch=3, chunk=8, window=None,
-             n_req=8, watermark=1, eos_p=0.05, defrag_every=0, max_steps=3000):
+             n_req=8, watermark=1, eos_p=0.05, defrag_every=0, max_steps=3000,
+             dp_shards=1):
     """Drive the scheduler with a random stream; returns summary stats.
     Token values are irrelevant to the policy layer, so 'decode' here is
     just the bookkeeping calls the engine would make."""
     rng = np.random.default_rng(seed)
-    pool = PagePool(num_pages, ps)
+    pool = PagePool(num_pages, ps, num_shards=dp_shards)
     maxP = 16
     sched = ChunkedScheduler(
         SchedulerConfig(max_batch, ps, chunk, max_pages_per_seq=maxP,
-                        watermark=watermark, window=window),
+                        watermark=watermark, window=window,
+                        dp_shards=dp_shards),
         pool,
     )
     pending = []
     for rid in range(n_req):
         p, m = int(rng.integers(1, 20)), int(rng.integers(1, 10))
-        if pool.pages_for(p + m) <= maxP:
+        if (pool.pages_for(p + m) <= maxP
+                and sched._live_bound(p + m) <= pool.pages_per_shard):
             pending.append((rid, p, m))
     submitted, finished = set(), set()
     steps = preemptions = 0
@@ -91,9 +100,11 @@ def simulate(seed, num_pages=12, ps=4, max_batch=3, chunk=8, window=None,
     # termination: every submitted request finishes within the step bound
     assert not sched.has_work and not pending, f"live work after {steps} steps"
     assert finished == submitted
-    # no leak: freed == allocated at drain
+    # no leak: freed == allocated at drain — in every shard's sub-pool
     assert pool.free_pages == num_pages
     assert not pool._owned
+    for s in range(pool.num_shards):
+        assert pool.free_pages_in(s) == pool.pages_per_shard, f"shard {s} leaked"
     return {"steps": steps, "preemptions": preemptions}
 
 
@@ -112,6 +123,56 @@ def test_tight_pool_preempts_but_terminates(seed):
 def test_defrag_mid_stream_keeps_invariants():
     for seed in range(6):
         simulate(seed, defrag_every=3)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("dp_shards", [2, 4])
+def test_sharded_streams_keep_invariants(seed, dp_shards):
+    """EP x DP pool partition: random streams through per-shard sub-pools
+    keep every invariant (per-shard used/free sums to the aggregate, pages
+    never cross a request's pinned shard) and drain every shard clean."""
+    simulate(seed, num_pages=16, max_batch=2 * dp_shards, dp_shards=dp_shards,
+             n_req=10)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_tight_sharded_pool_preempts_but_terminates(seed):
+    """Page pressure inside one shard evicts same-shard victims only; the
+    per-shard oldest request always progresses, so the stream terminates."""
+    stats = simulate(seed, num_pages=12, ps=2, max_batch=4, dp_shards=2,
+                     n_req=10)
+    assert stats["steps"] < 3000
+
+
+def test_sharded_defrag_and_window_streams():
+    for seed in range(4):
+        simulate(seed, num_pages=16, max_batch=4, dp_shards=2, defrag_every=3)
+        simulate(seed, num_pages=16, max_batch=4, dp_shards=2, window=6)
+
+
+def test_per_shard_bytes_accounting_sums_to_aggregate():
+    """kv_bytes_resident_per_shard partitions kv_bytes_resident exactly, at
+    every allocation state."""
+    from conftest import tiny_dense
+    from repro.serving.kv_cache import (
+        kv_bytes_resident,
+        kv_bytes_resident_per_shard,
+    )
+
+    cfg = tiny_dense()
+    pool = PagePool(12, 4, num_shards=3)
+    pool.alloc(0, 3, shard=0)
+    pool.alloc(1, 2, shard=2)
+    for state in range(3):
+        per = kv_bytes_resident_per_shard(cfg, pool)
+        assert len(per) == 3
+        assert sum(per) == kv_bytes_resident(cfg, pool)
+        if state == 0:
+            assert per[1] == 0 and per[0] > per[2] > 0
+            pool.alloc(2, 4, shard=1)
+        elif state == 1:
+            pool.free_request(0)
+    assert kv_bytes_resident_per_shard(cfg, pool)[0] == 0
 
 
 def test_admission_respects_free_page_budget():
