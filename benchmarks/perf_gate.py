@@ -16,6 +16,12 @@ Metric classes (by key name / leaf type):
   are exact — parity flags, page counts, trace counts and row identities
   are deterministic claims, not measurements.
 * **other floats** — 25% relative band (utilization ratios, fractions).
+* **informational** (resilience counters: paths containing ``anomaly``,
+  ``shed``, ``evict``, ``skipped``, ``rollback``, ``fallback``, or
+  ``intervention``) — tracked, never gated: a drift in how many updates
+  the anomaly supervisor skipped or how many requests the engine shed is
+  reported as a note, not a failure (the chaos suite asserts the recovery
+  *behavior*; the bench just surfaces the counts).
 
 A key present in the baseline but missing from the fresh artifact is a
 coverage regression and fails; new keys in the fresh artifact pass (they
@@ -47,10 +53,16 @@ FLOAT_TOL = 0.25
 
 _TIME_MARKERS = ("us_", "_ms", "ms_", "per_s", "_blocked", "restore_ms")
 _HIGHER_BETTER = ("per_s",)
+_INFO_MARKERS = ("anomaly", "shed", "evict", "skipped", "rollback",
+                 "fallback", "intervention")
 
 
 def _is_timing(key: str) -> bool:
     return any(m in key for m in _TIME_MARKERS)
+
+
+def _is_informational(path: str) -> bool:
+    return any(m in path for m in _INFO_MARKERS)
 
 
 def _rel_worse(key: str, base: float, fresh: float) -> float:
@@ -109,6 +121,11 @@ def compare(base: Any, fresh: Any, path: str, failures: List[str],
             compare(brow, frow, sub, failures, notes)
         return
     key = path.rsplit(".", 1)[-1]
+    if _is_informational(path):
+        if fresh != base:
+            notes.append(f"{path}: {base!r} -> {fresh!r} (informational "
+                         f"resilience counter; not gated)")
+        return
     if isinstance(base, bool) or isinstance(base, str) or base is None:
         if fresh != base:
             failures.append(f"{path}: {base!r} -> {fresh!r} (exact metric)")

@@ -105,6 +105,50 @@ def drive(engine, requests):
     }, {r.rid: list(r.output) for r in requests}
 
 
+# -- graceful degradation under overload -------------------------------------
+def run_resilience(cfg, params):
+    """Overload a deliberately tiny shed-configured engine (the
+    ``resilience`` report section): admission control must shed loudly
+    (typed ShedError, request never enqueued), deadlines must evict on
+    time, and the drained engine must end with zero resident pages. The
+    counters come from :meth:`ServingEngine.health` — the same snapshot an
+    external load-balancer polls."""
+    from repro.resilience import ShedError
+
+    engine = ServingEngine(
+        cfg, params, max_batch=2, max_seq=MAX_SEQ, cache_mode="paged",
+        page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK, num_pages=16,
+        max_queue=2, shed_watermark=1, deadline_steps=40,
+    )
+    accepted, shed = [], 0
+    for r in make_requests(cfg, seed=3):
+        try:
+            engine.submit(r)
+            accepted.append(r)
+        except ShedError:
+            shed += 1
+    steps = 0
+    while engine.sched.has_work and steps < 2000:
+        engine.step()
+        steps += 1
+    h = engine.health()
+    assert h["shed_count"] == shed
+    assert h["resident_pages"] == 0, "page leak after drain"
+    assert shed + len(accepted) == N_REQ
+    return {
+        "workload": {"requests": N_REQ, "max_batch": 2, "num_pages": 16,
+                     "max_queue": 2, "shed_watermark": 1, "deadline_steps": 40},
+        "accepted": len(accepted),
+        "shed_count": int(h["shed_count"]),
+        "deadline_evictions": int(h["deadline_evictions"]),
+        "completed_ok": sum(
+            1 for r in accepted
+            if r.status == "ok" and len(r.output) >= r.max_new_tokens
+        ),
+        "resident_pages_after_drain": int(h["resident_pages"]),
+    }
+
+
 # -- multi-device scaling (subprocess workers) -------------------------------
 # pool-bound workload: every request needs 5 pages (24-token prompt + 8 new
 # at page_size 8) and each DP shard's sub-pool holds 11, so exactly two
@@ -231,6 +275,10 @@ def run_scaling():
 
 def main():
     cfg = _bench_cfg()
+    # single-host sections have no EP plan: pick the legal dispatcher
+    # explicitly rather than riding the quiet alltoall->allgather fallback,
+    # which CI's REPRO_STRICT_DISPATCH=1 turns into a loud error
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatcher="allgather"))
     params = init_from_decls(model_decl(cfg), jax.random.PRNGKey(0))
 
     rows, outputs = [], {}
@@ -267,6 +315,11 @@ def main():
         "parity_token_for_token": parity,
         "kv_bytes_saved": ring["kv_bytes_resident"] - paged["kv_bytes_resident"],
     }
+    report["resilience"] = run_resilience(cfg, params)
+    res = report["resilience"]
+    print(f"overload resilience: {res['accepted']} accepted / "
+          f"{res['shed_count']} shed, {res['deadline_evictions']} deadline "
+          f"evictions, {res['completed_ok']} completed on time")
     if "--skip-scaling" not in sys.argv:
         print("multi-device scaling (subprocess workers)...")
         report["scaling"] = run_scaling()

@@ -2,6 +2,10 @@ from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint, upcycle_on_l
 from repro.checkpoint.manager import (  # noqa: F401
     CheckpointManager,
     latest_step,
+    latest_verified_step,
     list_steps,
     restore_tree,
+    step_verifies,
+    verified_steps,
 )
+from repro.checkpoint.sharded import verify_checkpoint  # noqa: F401

@@ -18,6 +18,25 @@ The manager stores plain nested-dict trees (see ``train/state.py`` for the
 TrainState <-> tree mapping); restore takes an optional ``target`` tree of
 ``NamedSharding`` (same structure) and reshards each leaf on load — save
 under EP on the study mesh, resume under ETP on the production mesh.
+
+**Integrity + supervised recovery** (see ``checkpoint/sharded.py`` for the
+checksum format):
+
+* restore verifies before trusting: the requested step must pass deep
+  (CRC) validation; with no explicit step, restore walks newest -> oldest
+  and returns the newest checkpoint that VERIFIES, warning about every
+  corrupt step it skipped — a torn or bit-flipped latest costs one
+  checkpoint interval, never a silently-garbage TrainState. If nothing
+  verifies, :class:`~repro.resilience.recovery.CheckpointCorruptionError`
+  lists every step tried and why it failed.
+* retention counts only *verified* checkpoints toward ``keep_last``: a
+  corrupt latest can never evict the last good one. Corrupt step dirs are
+  only reclaimed once they are older than the oldest retained verified
+  step.
+* shard writes retry with exponential backoff inside ``write_leaf``; a
+  fault that outlasts the retries fails the save loudly (surfaced on the
+  next :meth:`CheckpointManager.wait`), leaving previous checkpoints
+  intact.
 """
 from __future__ import annotations
 
@@ -26,6 +45,7 @@ import re
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.checkpoint.sharded import (
@@ -34,8 +54,13 @@ from repro.checkpoint.sharded import (
     read_manifest,
     read_tree,
     snapshot_leaf,
+    verify_checkpoint,
     write_leaf,
     write_manifest,
+)
+from repro.resilience.recovery import (
+    CheckpointCorruptionError,
+    ShardCorruptionError,
 )
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
@@ -62,23 +87,82 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def step_verifies(directory: str, step: int, deep: bool = False) -> bool:
+    """True if the committed ``step`` passes checkpoint validation."""
+    try:
+        verify_checkpoint(os.path.join(directory, _step_dir(step)), deep=deep)
+        return True
+    except ShardCorruptionError:
+        return False
+
+
+def verified_steps(directory: str, deep: bool = False) -> List[int]:
+    """Committed steps that pass validation, ascending."""
+    return [s for s in list_steps(directory) if step_verifies(directory, s, deep)]
+
+
+def latest_verified_step(directory: str, deep: bool = True) -> Optional[int]:
+    for s in reversed(list_steps(directory)):
+        if step_verifies(directory, s, deep):
+            return s
+    return None
+
+
 def restore_tree(
     directory: str,
     step: Optional[int] = None,
     target: Optional[Any] = None,
+    verify: bool = True,
 ) -> Tuple[Any, Dict[str, Any]]:
     """Load a committed checkpoint -> (nested-dict tree, manifest).
 
     ``target``: optional pytree of ``NamedSharding`` (same nested-dict
     structure, or a flat ``key -> sharding`` dict); leaves without a target
     come back as plain host-committed ``jnp`` arrays.
+
+    With ``verify`` (default): an explicit ``step`` must pass deep (CRC)
+    validation or :class:`CheckpointCorruptionError` is raised — a pinned
+    restore never falls back silently. With ``step=None`` the newest
+    checkpoint that verifies wins; corrupt newer steps are skipped with a
+    warning naming the corruption.
     """
-    if step is None:
-        step = latest_step(directory)
-        assert step is not None, f"no committed checkpoint under {directory}"
-    path = os.path.join(directory, _step_dir(step))
-    manifest = read_manifest(path)
-    return read_tree(path, manifest, target), manifest
+    steps = list_steps(directory)
+    assert steps, f"no committed checkpoint under {directory}"
+    if step is not None:
+        path = os.path.join(directory, _step_dir(step))
+        if verify:
+            try:
+                verify_checkpoint(path, deep=True)
+            except ShardCorruptionError as e:
+                raise CheckpointCorruptionError(
+                    f"checkpoint step {step} under {directory} failed "
+                    f"validation: {e}"
+                ) from e
+        manifest = read_manifest(path)
+        return read_tree(path, manifest, target), manifest
+    tried: List[str] = []
+    for s in reversed(steps):
+        path = os.path.join(directory, _step_dir(s))
+        try:
+            if verify:
+                verify_checkpoint(path, deep=True)
+            manifest = read_manifest(path)
+            tree = read_tree(path, manifest, target)
+        except (ShardCorruptionError, OSError, ValueError, KeyError) as e:
+            tried.append(f"step {s}: {e}")
+            continue
+        if tried:
+            warnings.warn(
+                f"restored step {s} from {directory} after skipping "
+                f"{len(tried)} corrupt newer checkpoint(s): "
+                + "; ".join(tried),
+                stacklevel=2,
+            )
+        return tree, manifest
+    raise CheckpointCorruptionError(
+        f"no checkpoint under {directory} passes validation — tried "
+        + "; ".join(tried)
+    )
 
 
 class CheckpointManager:
@@ -89,10 +173,15 @@ class CheckpointManager:
         self.keep_last = keep_last
         self.async_save = async_save
         self.last_blocked_s = 0.0  # wall time the training thread spent in save()
+        self.restore_fallbacks = 0  # corrupt steps skipped across restores
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # structural-verification cache for retention: committed step dirs
+        # are immutable, EXCEPT when a rollback re-saves the same step —
+        # _write invalidates that entry after its commit.
+        self._verify_cache: Dict[int, bool] = {}
         os.makedirs(directory, exist_ok=True)
-        self._sweep_tmp()
+        self._sweep_tmp()  # startup sweep: debris from any crashed writer
 
     # -- internals ---------------------------------------------------------
 
@@ -114,12 +203,38 @@ class CheckpointManager:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        self._verify_cache.pop(step, None)  # rollback may re-save a step
         self._prune()
 
+    def _step_verified(self, step: int) -> bool:
+        # deep (CRC) verification: a torn-but-payload-sized or bit-flipped
+        # checkpoint must never count toward retention. Cached — each step
+        # is scrubbed once per manager, in the overlapped writer thread
+        # right after its own commit.
+        if step not in self._verify_cache:
+            self._verify_cache[step] = step_verifies(
+                self.directory, step, deep=True
+            )
+        return self._verify_cache[step]
+
     def _prune(self):
+        """Retention over VERIFIED checkpoints only: keep the newest
+        ``keep_last`` steps that pass deep (CRC) validation; a corrupt
+        latest therefore never evicts the last good checkpoint. Corrupt
+        dirs are reclaimed once older than the oldest retained verified
+        step (newer ones are left for the restore fallback to skip and for
+        forensics)."""
         steps = list_steps(self.directory)
-        for s in steps[: max(0, len(steps) - self.keep_last)]:
-            shutil.rmtree(os.path.join(self.directory, _step_dir(s)), ignore_errors=True)
+        good = [s for s in steps if self._step_verified(s)]
+        keep = set(good[-self.keep_last:]) if self.keep_last > 0 else set()
+        if not keep:
+            return  # nothing verified: delete nothing
+        oldest_kept = min(keep)
+        for s in steps:
+            if s not in keep and s < oldest_kept:
+                shutil.rmtree(os.path.join(self.directory, _step_dir(s)),
+                              ignore_errors=True)
+                self._verify_cache.pop(s, None)
 
     # -- public API --------------------------------------------------------
 
@@ -164,6 +279,18 @@ class CheckpointManager:
             self._thread.start()
         self.last_blocked_s = time.perf_counter() - t0
 
-    def restore(self, step: Optional[int] = None, target: Optional[Any] = None):
+    def restore(self, step: Optional[int] = None, target: Optional[Any] = None,
+                verify: bool = True):
+        """Verified restore (see :func:`restore_tree`); also sweeps writer
+        debris, so a manager opened purely to restore cleans up after a
+        crashed predecessor. Counts corrupt-step fallbacks in
+        ``restore_fallbacks``."""
         self.wait()
-        return restore_tree(self.directory, step, target)
+        self._sweep_tmp()
+        before = latest_step(self.directory)
+        out = restore_tree(self.directory, step, target, verify=verify)
+        if step is None and before is not None and out[1]["step"] != before:
+            self.restore_fallbacks += len(
+                [s for s in list_steps(self.directory) if s > out[1]["step"]]
+            )
+        return out

@@ -25,17 +25,36 @@ Manifest leaf entry::
 
 bf16 has no portable numpy storage dtype; shard files hold a uint16 view
 plus the dtype tag (same convention as the format-1 checkpoints).
+
+**Integrity:** every shard record carries a CRC32 over the exact bytes the
+file stores (``crc32``) plus the payload size (``bytes``), written into the
+manifest at save time. :func:`verify_checkpoint` re-validates a committed
+step directory either *structurally* (manifest parses, every shard file
+exists and is at least payload-sized — catches torn/truncated writes for
+pennies) or *deeply* (full re-read + CRC — catches silent bit flips).
+Restore paths verify before trusting (see ``checkpoint/manager.py``), and
+shard I/O goes through bounded retry + exponential backoff
+(:func:`repro.resilience.recovery.retry_io`). Fault-injection sites
+``ckpt.shard_write`` / ``ckpt.shard_read`` thread the chaos harness through
+this exact code path.
 """
 from __future__ import annotations
 
 import json
 import os
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.resilience import faults
+from repro.resilience.recovery import (
+    InjectedFault,
+    ShardCorruptionError,
+    retry_io,
+)
 from repro.sharding.rules import spec_to_json
 
 _SEP = "::"
@@ -108,6 +127,28 @@ def snapshot_leaf(arr) -> Tuple[Dict[str, Any], List[Tuple[List[List[int]], np.n
     return entry, shards
 
 
+def _crc(data: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(data).tobytes())
+
+
+def _save_shard(path: str, fname: str, data: np.ndarray) -> None:
+    """Write one shard file, then apply any injected write faults — the
+    chaos harness corrupts the REAL bytes on disk, so validation is tested
+    against exactly what a torn or flipped write would leave behind."""
+    fp = os.path.join(path, fname)
+    np.save(fp, data)
+    for spec in faults.fire("ckpt.shard_write"):
+        if spec.kind == "write_fail":
+            if os.path.exists(fp):
+                os.remove(fp)
+            raise InjectedFault(f"injected shard write failure: {fname}")
+        if spec.kind == "torn":
+            faults.truncate_file(fp, spec.args.get("keep_fraction", 0.5))
+        elif spec.kind == "bitflip":
+            inj = faults.active()
+            faults.flip_bit(fp, inj.rng if inj is not None else None)
+
+
 def write_leaf(
     path: str,
     key: str,
@@ -115,24 +156,86 @@ def write_leaf(
     shards: List[Tuple[List[List[int]], np.ndarray]],
 ) -> Dict[str, Any]:
     """Write a snapshot's shard files under ``path``; returns the completed
-    manifest entry (with file names)."""
+    manifest entry (with file names + per-shard content checksums). Each
+    shard write is retried with backoff, so a transient I/O failure costs a
+    few milliseconds instead of the checkpoint."""
     base = key.replace(_SEP, "__")
     recs = []
     for i, (index, data) in enumerate(shards):
         fname = f"{base}__s{i}.npy" if len(shards) > 1 else f"{base}.npy"
-        if entry["dtype"] == "bfloat16":
-            np.save(os.path.join(path, fname), data.view(np.uint16))
-        else:
-            np.save(os.path.join(path, fname), data)
-        recs.append({"file": fname, "index": index})
+        saved = data.view(np.uint16) if entry["dtype"] == "bfloat16" else data
+        retry_io(_save_shard, path, fname, saved, what=f"ckpt write {fname}")
+        recs.append({
+            "file": fname, "index": index,
+            "bytes": int(saved.nbytes), "crc32": _crc(saved),
+        })
     return {**entry, "shards": recs}
 
 
 def _load_shard(path: str, fname: str, dtype: str) -> np.ndarray:
-    arr = np.load(os.path.join(path, fname), mmap_mode="r")
+    def load():
+        for spec in faults.fire("ckpt.shard_read"):
+            if spec.kind == "read_fail":
+                raise InjectedFault(f"injected shard read failure: {fname}")
+        return np.load(os.path.join(path, fname), mmap_mode="r")
+
+    arr = retry_io(load, what=f"ckpt read {fname}")
     if dtype == "bfloat16":
         arr = arr.view(jnp.bfloat16)  # dtype view on the memmap — no copy
     return arr
+
+
+def verify_shard(path: str, entry: Dict[str, Any], rec: Dict[str, Any]) -> None:
+    """Deep-validate one shard file against its manifest record; raises
+    :class:`ShardCorruptionError` naming the file and the mismatch."""
+    fp = os.path.join(path, rec["file"])
+    if not os.path.exists(fp):
+        raise ShardCorruptionError(f"{fp}: shard file missing")
+    try:
+        arr = np.load(fp)  # full read, no mmap: the CRC covers every byte
+    except Exception as e:  # noqa: BLE001 — any parse failure is corruption
+        raise ShardCorruptionError(f"{fp}: unreadable shard ({e})") from e
+    want_shape = tuple(hi - lo for lo, hi in rec["index"])
+    if tuple(arr.shape) != want_shape:
+        raise ShardCorruptionError(
+            f"{fp}: shard shape {tuple(arr.shape)} != manifest index extent "
+            f"{want_shape}"
+        )
+    if "crc32" in rec and _crc(arr) != rec["crc32"]:
+        raise ShardCorruptionError(
+            f"{fp}: content checksum mismatch (bit corruption) — expected "
+            f"crc32 {rec['crc32']}, file hashes differently"
+        )
+
+
+def verify_checkpoint(path: str, deep: bool = True) -> Dict[str, Any]:
+    """Validate a committed step directory; returns the manifest.
+
+    ``deep=False`` is the structural pass (manifest parses, every shard
+    file exists and holds at least its recorded payload bytes — catches
+    torn writes without reading data). ``deep=True`` additionally re-reads
+    every shard and checks its CRC32 (catches bit flips). Pre-checksum
+    (PR-4 era) manifests verify structurally only — their records carry no
+    ``crc32``/``bytes`` fields to check against.
+    Raises :class:`ShardCorruptionError` on the first bad shard.
+    """
+    try:
+        manifest = read_manifest(path)
+    except Exception as e:  # noqa: BLE001
+        raise ShardCorruptionError(f"{path}: unreadable manifest ({e})") from e
+    for entry in manifest["leaves"].values():
+        for rec in entry.get("shards", ()):
+            fp = os.path.join(path, rec["file"])
+            if not os.path.exists(fp):
+                raise ShardCorruptionError(f"{fp}: shard file missing")
+            if "bytes" in rec and os.path.getsize(fp) < rec["bytes"]:
+                raise ShardCorruptionError(
+                    f"{fp}: file holds {os.path.getsize(fp)} bytes < "
+                    f"recorded payload {rec['bytes']} (torn write)"
+                )
+            if deep:
+                verify_shard(path, entry, rec)
+    return manifest
 
 
 def _np_dtype(dtype: str):

@@ -376,7 +376,15 @@ def smoke_config(cfg: ModelConfig) -> ModelConfig:
     if cfg.d_ff:
         kw.update(d_ff=512)
     if cfg.moe is not None:
-        kw.update(moe=dataclasses.replace(cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2), expert_d_ff=0))
+        moe = dataclasses.replace(cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2), expert_d_ff=0)
+        if moe.dispatcher in ("alltoall", "a2a_overlap"):
+            # smoke configs are single-host by definition: the EP-only
+            # dispatchers have no plan to shard over and would trip strict
+            # dispatch (REPRO_STRICT_DISPATCH=1 in tests/CI). 'allgather' is
+            # what the fallback resolves to; EP-mesh tests opt back in
+            # explicitly.
+            moe = dataclasses.replace(moe, dispatcher="allgather")
+        kw.update(moe=moe)
     if cfg.sliding_window:
         kw.update(sliding_window=32)
     return cfg.replace(name=cfg.name, **kw)

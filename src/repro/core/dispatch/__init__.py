@@ -19,10 +19,13 @@ needs the full-probability tables -> allgather; alltoall needs an EP plan
 and divisible token shards). Falling back from an EP dispatcher emits a
 warning naming the offending shapes; with ``MoEConfig.strict_dispatch``
 (set by the mesh-mode serving engine, where the fallback would silently
-forfeit the EP win) it raises instead.
+forfeit the EP win) — or with the ``REPRO_STRICT_DISPATCH`` environment
+variable truthy, the default in this repo's test suite and CI — it raises
+instead, so a dispatch bug cannot hide behind the quiet allgather path.
 """
 from __future__ import annotations
 
+import os
 import warnings
 from typing import Any, Optional
 
@@ -49,6 +52,14 @@ DISPATCHERS = {
     "a2a_overlap": OverlapAllToAllDispatcher,
     "sorted": SortedDispatcher,
 }
+
+
+def strict_dispatch_env() -> bool:
+    """Environment override making every EP-dispatcher fallback an error
+    (tests/CI export ``REPRO_STRICT_DISPATCH=1``)."""
+    return os.environ.get("REPRO_STRICT_DISPATCH", "").lower() in (
+        "1", "true", "yes", "on"
+    )
 
 
 def get_dispatcher(
@@ -106,7 +117,7 @@ def get_dispatcher(
                 "silently forfeits the EP win: pad the batch to the "
                 "token-shard product or pick a legal dispatcher."
             )
-            if getattr(moe, "strict_dispatch", False):
+            if getattr(moe, "strict_dispatch", False) or strict_dispatch_env():
                 raise ValueError(msg)
             warnings.warn(msg, stacklevel=2)
             name = "allgather"

@@ -10,13 +10,29 @@ meaningful and loss curves differ measurably between sources.
 
 The iterator is host-side numpy (cheap, reproducible) and yields
 global-batch arrays; the launcher device_puts them with the batch sharding.
+
+**Corrupt-batch handling**: every batch is validated (token ids in range,
+float fields finite) before it is handed to the trainer; a corrupt batch —
+injected via the ``data.batch`` fault site or a genuinely bad shard — is
+skipped with a warning, its index recorded in ``state()["skipped"]`` (and
+therefore in the checkpoint meta), up to a bounded ``skip_budget``; past
+the budget the iterator raises
+:class:`~repro.resilience.recovery.DataCorruptionError` — a pipeline
+producing mostly garbage should stop the run, not silently thin the data.
+Because skipped batches still consume the bit-generator stream, an
+uninterrupted run and a checkpoint-resumed one see byte-identical batch
+sequences.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.resilience import faults
+from repro.resilience.recovery import DataCorruptionError
 
 
 @dataclasses.dataclass
@@ -91,29 +107,73 @@ class TrainIterator:
         batch_size: int,
         extra: Optional[Dict[str, Tuple[int, ...]]] = None,
         sample_seed: int = 0,
+        skip_budget: int = 16,
     ):
         self.ds = dataset
         self.batch_size = batch_size
         self.extra = extra
+        self.skip_budget = skip_budget
         self._rng = np.random.default_rng(sample_seed + 17)
         self._batches = 0
+        self._skipped: List[int] = []
 
     def __iter__(self) -> "TrainIterator":
         return self
 
-    def __next__(self) -> Dict[str, np.ndarray]:
+    def _draw(self) -> Dict[str, np.ndarray]:
         b = self.ds.batch(self._rng, self.batch_size)
         if self.extra:
             for k, shape in self.extra.items():
                 b[k] = self._rng.standard_normal(shape).astype(np.float32) * 0.02
-        self._batches += 1
         return b
+
+    def _validate(self, b: Dict[str, np.ndarray]) -> Optional[str]:
+        """None if the batch is servable, else a description of the rot."""
+        V = self.ds.vocab_size
+        for k, v in b.items():
+            if np.issubdtype(v.dtype, np.integer):
+                lo, hi = int(v.min()), int(v.max())
+                if lo < 0 or hi >= V:
+                    return f"'{k}' token ids outside [0, {V}): min {lo} max {hi}"
+            elif not np.isfinite(v).all():
+                return f"'{k}' has non-finite values"
+        return None
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        while True:
+            b = self._draw()
+            idx = self._batches
+            self._batches += 1
+            for spec in faults.fire("data.batch"):
+                if spec.kind == "corrupt_batch":
+                    b = dict(b)
+                    toks = b["tokens"].copy()
+                    toks.flat[0] = spec.args.get(
+                        "value", self.ds.vocab_size + 7
+                    )
+                    b["tokens"] = toks
+            err = self._validate(b)
+            if err is None:
+                return b
+            self._skipped.append(idx)
+            warnings.warn(
+                f"data batch {idx} corrupt ({err}) — skipped "
+                f"[{len(self._skipped)}/{self.skip_budget} budget]",
+                stacklevel=2,
+            )
+            if len(self._skipped) > self.skip_budget:
+                raise DataCorruptionError(
+                    f"{len(self._skipped)} corrupt batches exceeds the "
+                    f"skip budget of {self.skip_budget} (indices "
+                    f"{self._skipped}); the pipeline is rotten, stopping"
+                )
 
     def state(self) -> Dict:
         return {
             "rng": self._rng.bit_generator.state,
             "batches": self._batches,
             "batch_size": self.batch_size,
+            "skipped": list(self._skipped),
         }
 
     def restore(self, state: Dict) -> "TrainIterator":
@@ -123,6 +183,7 @@ class TrainIterator:
         )
         self._rng.bit_generator.state = state["rng"]
         self._batches = int(state["batches"])
+        self._skipped = list(state.get("skipped", []))
         return self
 
 
@@ -134,6 +195,7 @@ def make_train_iter(
     seed: int = 0,
     extra: Optional[Dict[str, Tuple[int, ...]]] = None,
     sample_seed: Optional[int] = None,
+    skip_budget: int = 16,
 ) -> TrainIterator:
     """Yields global batches forever, deterministically. ``seed`` defines
     the LANGUAGE (the two sources' statistics); ``sample_seed`` the sampling
@@ -145,4 +207,5 @@ def make_train_iter(
     return TrainIterator(
         ds, batch_size, extra,
         sample_seed=(sample_seed if sample_seed is not None else seed),
+        skip_budget=skip_budget,
     )

@@ -48,6 +48,15 @@ def main(argv=None):
                     help="page-pool size (default: ring-capacity parity)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens prefetched per chunked-prefill step")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="evict requests older than this many engine steps "
+                         "(0 = no deadlines; paged mode only)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="shed submits past this queue depth with a typed "
+                         "ShedError (0 = unbounded)")
+    ap.add_argument("--shed-watermark", type=int, default=0,
+                    help="shed submits when free KV pages minus backlog dip "
+                         "below this reserve (0 = off; paged mode only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -67,7 +76,10 @@ def main(argv=None):
                            dispatcher=args.dispatcher, use_kernel=args.use_kernel,
                            cache_mode=args.cache_mode, page_size=args.page_size,
                            num_pages=args.num_pages,
-                           prefill_chunk=args.prefill_chunk, mesh=mesh)
+                           prefill_chunk=args.prefill_chunk, mesh=mesh,
+                           deadline_steps=args.deadline_steps or None,
+                           max_queue=args.max_queue or None,
+                           shed_watermark=args.shed_watermark or None)
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
@@ -75,12 +87,36 @@ def main(argv=None):
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
-    outputs = engine.run(reqs)
+    from repro.resilience import ShedError
+
+    accepted, shed = [], 0
+    for r in reqs:
+        try:
+            engine.submit(r)
+            accepted.append(r)
+        except ShedError as e:
+            shed += 1
+            print(f"  SHED: {e}")
+    outputs = {r.rid: r.output for r in accepted}
+    steps = 0
+    while steps < 10_000 and (
+        engine.sched.has_work if args.cache_mode == "paged"
+        else (any(engine.slots) or engine.queue)
+    ):
+        engine.step()
+        steps += 1
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in outputs.values())
-    print(f"served {len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s, batch={args.max_batch}, "
-          f"cache={args.cache_mode})")
+    print(f"served {len(accepted)} requests ({shed} shed), {total_tokens} "
+          f"tokens in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
+          f"batch={args.max_batch}, cache={args.cache_mode})")
+    h = engine.health()
+    expired = [r.rid for r in accepted if r.status == "deadline"]
+    if expired:
+        print(f"  deadline-evicted requests: {expired}")
+    print(f"  health: shed {h['shed_count']}, deadline evictions "
+          f"{h['deadline_evictions']}, queued {h['queued_requests']}, "
+          f"resident {h['resident_requests']}")
     kv = engine.kv_stats()
     print(f"  kv peak {kv['kv_bytes_peak']/1e6:.2f} MB"
           + (f", page util {kv['page_utilization']:.2f}, "

@@ -64,6 +64,15 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="restore the latest full-state checkpoint from the "
                          "checkpoint dir and continue to --steps total")
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--supervise", action="store_true",
+                    help="arm the anomaly supervisor: skip NaN/spike steps, "
+                         "roll back to the last good checkpoint after "
+                         "--rollback-after consecutive bad steps")
+    ap.add_argument("--rollback-after", type=int, default=3,
+                    help="consecutive anomalous steps before rollback")
+    ap.add_argument("--step-timeout", type=float, default=0.0,
+                    help="per-step wall-clock watchdog in seconds "
+                         "(0 = disabled); a hung step raises HangError")
     return ap
 
 
@@ -140,17 +149,30 @@ def main(argv=None):
     print(f"training {cfg.name}: {t/1e6:.1f}M total / {a/1e6:.1f}M active params")
     # archs that are already MoE take the --dispatcher override here
     tr = Trainer(cfg, tcfg, params=params, state=state, data_iter=it,
-                 use_kernel=args.use_kernel, dispatcher=args.dispatcher)
+                 use_kernel=args.use_kernel, dispatcher=args.dispatcher,
+                 step_timeout_s=args.step_timeout or None)
 
-    from repro.train.callbacks import CheckpointCallback, LoggingCallback
+    from repro.train.callbacks import (
+        AnomalySupervisor,
+        CheckpointCallback,
+        LoggingCallback,
+    )
 
     callbacks = [LoggingCallback(log_every=tcfg.log_every)]
+    ckpt_cb = None
     if args.ckpt_every:
-        callbacks.append(CheckpointCallback(
+        ckpt_cb = CheckpointCallback(
             ckpt_dir, every=args.ckpt_every, keep_last=args.ckpt_keep,
             async_save=not args.blocking_ckpt,
             extra_meta={"arch": args.arch, "seed": args.seed,
                         **({"provenance": provenance} if provenance else {})},
+        )
+        callbacks.append(ckpt_cb)
+    if args.supervise:
+        # AFTER the checkpoint callback: a rollback joins the in-flight
+        # write before restoring
+        callbacks.append(AnomalySupervisor(
+            ckpt=ckpt_cb, rollback_after=args.rollback_after,
         ))
 
     done = int(jax.device_get(tr.state.step))

@@ -1,0 +1,38 @@
+"""Fault-injection harness + supervised recovery.
+
+Two halves, deliberately decoupled from the subsystems they protect (this
+package imports nothing from checkpoint/train/serving, so every layer can
+depend on it without cycles):
+
+* :mod:`repro.resilience.faults` — a deterministic, seeded fault-injection
+  harness. Production code calls :func:`faults.fire` at named injection
+  sites (checkpoint shard writes/reads, the train step, the data pipeline,
+  the serving page pool and step loop); with no injector installed the call
+  is a no-op, under ``faults.inject(...)`` it returns the :class:`FaultSpec`
+  list that matched the site's event counter. The chaos suite
+  (``tests/test_resilience.py``) drives every fault class through it.
+* :mod:`repro.resilience.recovery` — the typed error taxonomy
+  (:class:`ShedError`, :class:`CheckpointCorruptionError`, ...) plus the
+  bounded-retry/backoff helper the checkpoint I/O path uses. Every fault
+  class is either recovered automatically or surfaced through one of these
+  types — never a silent-corruption path.
+"""
+from repro.resilience.faults import (  # noqa: F401
+    FaultInjector,
+    FaultSpec,
+    active,
+    fire,
+    flip_bit,
+    inject,
+    truncate_file,
+)
+from repro.resilience.recovery import (  # noqa: F401
+    CheckpointCorruptionError,
+    DataCorruptionError,
+    HangError,
+    InjectedFault,
+    ShardCorruptionError,
+    ShedError,
+    TrainingDivergedError,
+    retry_io,
+)

@@ -1,0 +1,148 @@
+"""Deterministic fault-injection harness.
+
+Injection is *site + event-counter* based, not probability based, so every
+chaos test is exactly reproducible: an installed :class:`FaultInjector`
+counts the events at each named site and a :class:`FaultSpec` fires on a
+chosen window of that counter (``at``/``count``) or periodically
+(``every``). The optional ``seed`` only parameterizes payloads that need
+randomness (e.g. which bit a bit-flip corrupts), never *whether* a fault
+fires.
+
+Known sites and the fault kinds their host code applies:
+
+================== ==================================== =====================
+site               kinds                                threaded through
+================== ==================================== =====================
+``ckpt.shard_write`` ``write_fail`` | ``torn`` |        ``checkpoint/sharded.
+                   ``bitflip``                          py:_save_shard``
+``ckpt.shard_read``  ``read_fail``                      ``checkpoint/sharded.
+                                                        py:_load_shard``
+``train.step``     ``nan_grads`` | ``loss_spike`` |     ``train/trainer.py:
+                   ``hang``                             Trainer.run``
+``data.batch``     ``corrupt_batch``                    ``data/pipeline.py:
+                                                        TrainIterator``
+``serving.alloc``  ``alloc_fail``                       ``serving/kv_cache.
+                                                        py:PagePool.alloc``
+``serving.step``   ``hang``                             ``serving/engine.py:
+                                                        ServingEngine.step``
+================== ==================================== =====================
+
+Installation is a context manager (``with faults.inject(spec, ...)``), so a
+test cannot leak an injector into the rest of the suite; the async
+checkpoint writer thread sees the same injector (module global), which is
+exactly what the crash-mid-save chaos tests need.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One fault to inject: fires at ``site`` when that site's event
+    counter lands in ``[at, at + count)``, or (with ``every``) whenever
+    ``counter % every == at``."""
+
+    site: str
+    kind: str
+    at: int = 0
+    count: int = 1
+    every: Optional[int] = None
+    args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def matches(self, event: int) -> bool:
+        if self.every is not None:
+            return event % self.every == self.at % self.every
+        return self.at <= event < self.at + self.count
+
+
+class FaultInjector:
+    """Counts events per site and reports which specs fire on each one.
+
+    ``fired`` is the audit log — ``(site, kind, event_index)`` triples in
+    firing order — which the chaos suite asserts against to prove a fault
+    was actually exercised (a recovery test that never fired its fault
+    proves nothing).
+    """
+
+    def __init__(self, specs, seed: int = 0):
+        self.specs: List[FaultSpec] = list(specs)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self._counts: Dict[str, int] = defaultdict(int)
+        self._lock = threading.Lock()
+        self.fired: List[tuple] = []
+
+    def hits(self, site: str) -> List[FaultSpec]:
+        with self._lock:
+            event = self._counts[site]
+            self._counts[site] += 1
+            out = [s for s in self.specs if s.site == site and s.matches(event)]
+            for s in out:
+                self.fired.append((site, s.kind, event))
+        return out
+
+    def events(self, site: str) -> int:
+        with self._lock:
+            return self._counts[site]
+
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def active() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def inject(*specs: FaultSpec, seed: int = 0):
+    """Install a :class:`FaultInjector` for the dynamic extent of the
+    ``with`` block (re-entrant: the previous injector is restored)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = FaultInjector(specs, seed=seed)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def fire(site: str) -> List[FaultSpec]:
+    """The hook production code calls at an injection site. No injector
+    installed -> empty list (the common case, one global read)."""
+    inj = _ACTIVE
+    return inj.hits(site) if inj is not None else []
+
+
+# -- file corruption payloads (used by the ckpt.shard_write site and by
+# -- chaos tests that corrupt committed checkpoints post-hoc) ---------------
+
+
+def truncate_file(path: str, keep_fraction: float = 0.5) -> None:
+    """Torn write: keep only the leading ``keep_fraction`` of the file."""
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(1, int(size * keep_fraction)))
+
+
+def flip_bit(path: str, rng: Optional[np.random.Generator] = None,
+             skip_header: int = 128) -> int:
+    """Silent corruption: flip one bit in the file's data region (past the
+    ``.npy`` header) at a seeded offset. Returns the byte offset flipped."""
+    rng = rng if rng is not None else np.random.default_rng(0)
+    size = os.path.getsize(path)
+    lo = min(skip_header, max(0, size - 1))
+    off = int(rng.integers(lo, size))
+    with open(path, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)
+        f.seek(off)
+        f.write(bytes([byte[0] ^ (1 << int(rng.integers(0, 8)))]))
+    return off

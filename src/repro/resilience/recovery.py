@@ -1,0 +1,84 @@
+"""Typed error taxonomy + bounded-retry helper for supervised recovery.
+
+Every fault class the harness can inject maps to exactly one outcome:
+automatic recovery (retry, fallback-to-verified, skip-and-log, preempt) or
+one of these exception types. Code catching them can act on the *class* —
+a :class:`ShedError` means "back off and resubmit", a
+:class:`CheckpointCorruptionError` means "this checkpoint directory has no
+restorable state", a :class:`TrainingDivergedError` means "the run cannot
+self-heal and needs operator attention".
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from typing import Callable, Tuple, Type
+
+
+class InjectedFault(OSError):
+    """Raised by an injection site simulating an I/O failure. Subclasses
+    ``OSError`` so production retry paths treat it exactly like the real
+    transient failures it stands in for."""
+
+
+class ShardCorruptionError(RuntimeError):
+    """A checkpoint shard file failed validation (missing, torn, or
+    checksum mismatch). Carries enough context to name the bad file."""
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """No restorable checkpoint: the requested (or every) step failed
+    verification. The message lists every step tried and why it failed —
+    restore never silently returns garbage."""
+
+
+class DataCorruptionError(RuntimeError):
+    """The data pipeline exhausted its corrupt-batch skip budget."""
+
+
+class ShedError(RuntimeError):
+    """Admission rejected under load (queue bound or page-pool watermark).
+    The request was NOT enqueued; the client should back off and retry or
+    route elsewhere. Loud by design — the alternative is a deadlocked or
+    unboundedly-queued engine."""
+
+
+class HangError(RuntimeError):
+    """A watchdog tripped: one step exceeded its wall-clock budget (hung
+    collective, device stall, or a wedged host thread)."""
+
+
+class TrainingDivergedError(RuntimeError):
+    """The anomaly supervisor hit its strike limit and has no good
+    checkpoint to roll back to."""
+
+
+def retry_io(
+    fn: Callable,
+    *args,
+    attempts: int = 3,
+    base_delay_s: float = 0.01,
+    retry_on: Tuple[Type[BaseException], ...] = (OSError,),
+    sleep: Callable[[float], None] = time.sleep,
+    what: str = "io",
+    **kwargs,
+):
+    """Call ``fn`` with bounded retries and exponential backoff
+    (``base_delay_s * 2**attempt`` between tries). Non-``retry_on``
+    exceptions propagate immediately; the final failure propagates with the
+    retry count already warned, so a persistent fault is loud, not looping.
+    """
+    assert attempts >= 1
+    for attempt in range(attempts):
+        try:
+            return fn(*args, **kwargs)
+        except retry_on as e:
+            if attempt == attempts - 1:
+                raise
+            delay = base_delay_s * (2 ** attempt)
+            warnings.warn(
+                f"{what}: attempt {attempt + 1}/{attempts} failed ({e}); "
+                f"retrying in {delay:.3f}s",
+                stacklevel=2,
+            )
+            sleep(delay)

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -43,6 +44,8 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.config import ModelConfig, with_dispatcher
+from repro.resilience import faults
+from repro.resilience.recovery import HangError, ShedError
 from repro.models.model import (
     cache_decl,
     decode_step,
@@ -75,6 +78,8 @@ class Request:
     eos_id: Optional[int] = None
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline_steps: Optional[int] = None  # per-request deadline override
+    status: str = "ok"  # "ok" | "deadline" (evicted past its deadline)
 
 
 class ServingEngine:
@@ -94,6 +99,10 @@ class ServingEngine:
         prefill_chunk: int = 32,
         watermark: int = 0,
         mesh: Optional[Mesh] = None,
+        deadline_steps: Optional[int] = None,
+        max_queue: Optional[int] = None,
+        shed_watermark: Optional[int] = None,
+        step_timeout_s: Optional[float] = None,
     ):
         # MoE decode runs through the same dispatch subsystem as training;
         # `dispatcher` overrides the config's token dispatcher (e.g. "sorted"
@@ -101,6 +110,18 @@ class ServingEngine:
         # and (paged mode) the paged-attention decode kernel. `mesh` turns
         # on the EP x DP sharded mode (see module docstring).
         assert cache_mode in ("ring", "paged"), cache_mode
+        if cache_mode == "ring" and (deadline_steps is not None
+                                     or shed_watermark is not None):
+            raise ValueError(
+                "deadline_steps/shed_watermark need the paged scheduler "
+                "(the ring cache has no step clock or page accounting); "
+                "max_queue load-shedding works in both modes"
+            )
+        self.deadline_steps = deadline_steps
+        self.max_queue = max_queue
+        self.shed_watermark = shed_watermark
+        self.step_timeout_s = step_timeout_s
+        self.shed_count = 0  # ring-mode max_queue sheds (paged: scheduler's)
         cfg = with_dispatcher(cfg, dispatcher)
         self.mesh = mesh
         self.dp_shards, self.ep_size = 1, 1
@@ -191,7 +212,9 @@ class ServingEngine:
                 max_batch=self.max_batch, page_size=page_size,
                 prefill_chunk=prefill_chunk, max_pages_per_seq=maxP,
                 watermark=watermark, window=cfg.sliding_window,
-                dp_shards=dp,
+                dp_shards=dp, deadline_steps=self.deadline_steps,
+                max_queue=self.max_queue,
+                shed_watermark=self.shed_watermark,
             ),
             self.page_pool,
         )
@@ -225,10 +248,22 @@ class ServingEngine:
 
     # -- request management -------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue ``req``; raises :class:`ShedError` (request NOT enqueued)
+        when admission control rejects it — queue depth past ``max_queue``
+        or (paged) page headroom below ``shed_watermark``."""
         if self.cache_mode == "paged":
+            self.sched.submit(
+                req.rid, len(req.prompt), req.max_new_tokens,
+                deadline_steps=req.deadline_steps,
+            )  # may shed — then the rid is never registered
             self._rid2req[req.rid] = req
-            self.sched.submit(req.rid, len(req.prompt), req.max_new_tokens)
         else:
+            if self.max_queue is not None and len(self.queue) >= self.max_queue:
+                self.shed_count += 1
+                raise ShedError(
+                    f"request {req.rid} shed: queue depth {len(self.queue)} "
+                    f"at max_queue={self.max_queue}; back off and resubmit"
+                )
             self.queue.append(req)
 
     def _bucket(self, L: int) -> int:
@@ -280,10 +315,24 @@ class ServingEngine:
 
     # -- main loop ----------------------------------------------------------
     def step(self) -> int:
-        """One engine step. Returns the number of active requests."""
-        if self.cache_mode == "paged":
-            return self._step_paged()
-        return self._step_ring()
+        """One engine step. Returns the number of active requests. The
+        ``serving.step`` fault site can inject a hang here; with
+        ``step_timeout_s`` set a step that exceeds its wall budget raises
+        :class:`HangError` (watchdog for hung collectives/device stalls)."""
+        t0 = time.perf_counter()
+        for spec in faults.fire("serving.step"):
+            if spec.kind == "hang":
+                time.sleep(
+                    spec.args.get("seconds", 2.0 * (self.step_timeout_s or 0.05))
+                )
+        n = self._step_paged() if self.cache_mode == "paged" else self._step_ring()
+        dt = time.perf_counter() - t0
+        if self.step_timeout_s is not None and dt > self.step_timeout_s:
+            raise HangError(
+                f"serving step exceeded its {self.step_timeout_s:.3f}s wall "
+                f"budget ({dt:.3f}s) — hung collective or wedged host"
+            )
+        return n
 
     def _step_ring(self) -> int:
         self._fill_free_slots()
@@ -309,6 +358,10 @@ class ServingEngine:
 
     def _step_paged(self) -> int:
         plan = self.sched.plan()
+        for rid in plan.expired:
+            req = self._rid2req[rid]
+            req.done = True
+            req.status = "deadline"
         # sample the peak right after planning (allocation) — on_token below
         # may free a finished request's pages within the same step
         self.peak_used_pages = max(self.peak_used_pages, self.page_pool.used_pages)
@@ -381,6 +434,34 @@ class ServingEngine:
         self.sched.apply_defrag(mapping)
         self.pool_dev = permute_pool(self.pool_dev, mapping)
         return True
+
+    def health(self) -> Dict[str, object]:
+        """Operational snapshot: residency, backlog, shed/evict counters,
+        and the age of the oldest live request — what an external
+        load-balancer polls to decide whether to route here."""
+        if self.cache_mode == "paged":
+            free = sum(
+                self.page_pool.free_pages_in(sh) for sh in range(self.dp_shards)
+            )
+            return {
+                "mode": "paged",
+                "resident_requests": len(self.sched.running),
+                "queued_requests": len(self.sched.queue),
+                "resident_pages": self.page_pool.used_pages,
+                "free_pages": free,
+                "num_pages": self.num_pages,
+                "shed_count": self.sched.shed_count,
+                "deadline_evictions": self.sched.deadline_evictions,
+                "oldest_request_age_steps": self.sched.oldest_request_age(),
+                "engine_steps": self.sched.step_count,
+            }
+        return {
+            "mode": "ring",
+            "resident_requests": sum(1 for s in self.slots if s is not None),
+            "queued_requests": len(self.queue),
+            "shed_count": self.shed_count,
+            "deadline_evictions": 0,
+        }
 
     def kv_stats(self) -> Dict[str, float]:
         """Resident-KV accounting for the bench (both modes). In paged mode

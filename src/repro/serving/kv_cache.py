@@ -128,6 +128,14 @@ class PagePool:
         free = self._free[shard]
         if n < 0 or n > len(free):
             return None
+        from repro.resilience import faults
+
+        if any(s.kind == "alloc_fail" for s in faults.fire("serving.alloc")):
+            # transient exhaustion: same contract as a genuinely dry pool
+            # (None, no partial effect), so the scheduler's preemption /
+            # stall machinery handles it — the chaos suite proves no
+            # deadlock and eventual completion
+            return None
         pages = [free.pop() for _ in range(n)]
         self._owned.setdefault(rid, []).extend(pages)
         self._shard_of[rid] = shard

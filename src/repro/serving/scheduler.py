@@ -34,6 +34,16 @@ call produces one engine step:
   the window of every future query are released immediately — the window
   mask already excludes them, so paged decode holds O(window) KV per
   request where the full-context mapping would hold O(position).
+* **graceful degradation** (opt-in): ``max_queue``/``shed_watermark``
+  bound the backlog at :meth:`submit` — a request that would overflow the
+  queue or outrun the pool's spare capacity is rejected with a typed
+  :class:`~repro.resilience.recovery.ShedError` (the client backs off)
+  instead of being silently enqueued into an unservable backlog.
+  ``deadline_steps`` (config default, overridable per request) evicts
+  requests that have aged past their step budget at the top of each
+  :meth:`plan` — queued or running — freeing their pages for work that can
+  still meet its deadline. Evictions are loud: the rid lands in
+  ``StepPlan.expired`` and the request's ``status`` becomes ``"deadline"``.
 """
 from __future__ import annotations
 
@@ -43,6 +53,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.resilience.recovery import ShedError
 from repro.serving.kv_cache import PagePool
 
 
@@ -55,6 +66,10 @@ class SchedulerConfig:
     watermark: int = 0  # free pages kept in reserve at admission (per shard)
     window: Optional[int] = None  # sliding window: release dead pages
     dp_shards: int = 1  # batch-slot/sub-pool partitions (EP x DP serving)
+    # graceful degradation (None = disabled, the seed behavior):
+    deadline_steps: Optional[int] = None  # evict requests older than this
+    max_queue: Optional[int] = None  # shed submits past this queue depth
+    shed_watermark: Optional[int] = None  # shed when spare pages dip below
 
 
 @dataclasses.dataclass
@@ -71,6 +86,9 @@ class SchedRequest:
     logical_pages: int = 0  # logical pages ever allocated (monotone)
     preemptions: int = 0
     done: bool = False
+    submit_step: int = 0  # scheduler step count at submit (deadline clock)
+    deadline_steps: Optional[int] = None  # per-request deadline override
+    status: str = "ok"  # "ok" | "deadline" (evicted past its deadline)
 
     @property
     def in_prefill(self) -> bool:
@@ -98,6 +116,7 @@ class StepPlan:
     prefills: List[PrefillChunk]
     decode_slots: List[int]
     preempted: List[int]  # rids evicted while building this plan
+    expired: List[int] = dataclasses.field(default_factory=list)  # deadline
 
 
 class ChunkedScheduler:
@@ -114,9 +133,13 @@ class ChunkedScheduler:
         self.tables = np.full((cfg.max_batch, cfg.max_pages_per_seq), -1, np.int64)
         self._admit_counter = 0
         self.peak_resident_requests = 0  # max concurrent running (bench)
+        self.step_count = 0  # plan() calls; the deadline clock
+        self.shed_count = 0  # submits rejected by max_queue/shed_watermark
+        self.deadline_evictions = 0
 
     # -- submission ---------------------------------------------------------
-    def submit(self, rid: int, prompt_len: int, max_new_tokens: int) -> None:
+    def submit(self, rid: int, prompt_len: int, max_new_tokens: int,
+               deadline_steps: Optional[int] = None) -> None:
         total = prompt_len + max_new_tokens
         need = self.pool.pages_for(total)
         if need > self.cfg.max_pages_per_seq:
@@ -134,9 +157,36 @@ class ChunkedScheduler:
                 f"request {rid}: needs {live} live pages > per-shard pool "
                 f"of {self.pool.pages_per_shard}"
             )
+        # load shedding: reject at the door (typed, actionable) rather than
+        # queueing work the engine cannot serve in bounded time
+        if (self.cfg.max_queue is not None
+                and len(self.queue) >= self.cfg.max_queue):
+            self.shed_count += 1
+            raise ShedError(
+                f"request {rid} shed: queue depth {len(self.queue)} at "
+                f"max_queue={self.cfg.max_queue}; back off and resubmit"
+            )
+        if self.cfg.shed_watermark is not None:
+            backlog = sum(
+                self._live_bound(r.prompt_len + r.max_new_tokens)
+                for r in self.queue
+            )
+            free = sum(
+                self.pool.free_pages_in(sh)
+                for sh in range(self.cfg.dp_shards)
+            )
+            if free - self.cfg.shed_watermark < live + backlog:
+                self.shed_count += 1
+                raise ShedError(
+                    f"request {rid} shed: needs {live} pages + {backlog} "
+                    f"queued, but only {free} free "
+                    f"(shed_watermark={self.cfg.shed_watermark}); back off "
+                    "and resubmit"
+                )
         req = SchedRequest(
             rid=rid, prompt_len=prompt_len, max_new_tokens=max_new_tokens,
-            orig_prompt_len=prompt_len,
+            orig_prompt_len=prompt_len, submit_step=self.step_count,
+            deadline_steps=deadline_steps,
         )
         self.requests[rid] = req
         self.queue.append(req)
@@ -156,7 +206,9 @@ class ChunkedScheduler:
 
     # -- planning -----------------------------------------------------------
     def plan(self) -> StepPlan:
+        self.step_count += 1
         preempted: List[int] = []
+        expired = self._expire()
         self._admit()
         self.peak_resident_requests = max(
             self.peak_resident_requests, len(self.running)
@@ -194,7 +246,7 @@ class ChunkedScheduler:
         if preempted:
             gone = set(preempted)
             prefills = [c for c in prefills if c.rid not in gone]
-        return StepPlan(prefills, decode_slots, preempted)
+        return StepPlan(prefills, decode_slots, preempted, expired)
 
     def on_token(self, slot: int, done: bool) -> None:
         """Record one output token for ``slot`` (from a decode step or a
@@ -210,7 +262,38 @@ class ChunkedScheduler:
             # generated was just bumped, so decode_pos == tokens now stored
             self._release_dead(req, stored=req.decode_pos)
 
+    def oldest_request_age(self) -> int:
+        """Steps since the oldest live (queued or running) request was
+        submitted — the engine health snapshot's staleness headline."""
+        live = list(self.queue) + list(self.running.values())
+        if not live:
+            return 0
+        return self.step_count - min(r.submit_step for r in live)
+
     # -- internals ----------------------------------------------------------
+    def _expire(self) -> List[int]:
+        """On-time eviction: terminate every queued/running request whose
+        age exceeds its deadline (per-request override, else the config
+        default). Pages are freed immediately so the reclaimed capacity
+        serves requests that can still meet their deadlines."""
+        out: List[int] = []
+        for req in list(self.queue) + list(self.running.values()):
+            dl = (req.deadline_steps if req.deadline_steps is not None
+                  else self.cfg.deadline_steps)
+            if dl is None or self.step_count - req.submit_step <= dl:
+                continue
+            if req.slot >= 0:
+                self.pool.free_request(req.rid)
+                self.tables[req.slot] = -1
+                del self.running[req.slot]
+            else:
+                self.queue.remove(req)
+            req.done = True
+            req.status = "deadline"
+            self.deadline_evictions += 1
+            out.append(req.rid)
+        return out
+
     def _admit(self) -> None:
         while self.queue:
             free_slots = [
@@ -278,6 +361,12 @@ class ChunkedScheduler:
             n_new = need - req.logical_pages
             pages = self.pool.alloc(req.rid, n_new, shard=shard)
             if pages is None:
+                if self.pool.free_pages_in(shard) >= n_new:
+                    # the sub-pool could have satisfied this: a transient
+                    # alloc failure (fault injection / flaky allocator),
+                    # not genuine pressure — stall this step and retry
+                    # instead of evicting innocents
+                    return False
                 victim = self._youngest_running(older_than=req, shard=shard)
                 if victim is None:
                     sh_seqs = [

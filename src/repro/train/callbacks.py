@@ -98,6 +98,148 @@ class EvalCallback(Callback):
         self.log(f"step {step:5d} eval ce {ce:.4f}")
 
 
+class AnomalySupervisor(Callback):
+    """NaN/Inf + loss-spike supervisor over the in-jit anomaly guard.
+
+    The guard itself lives inside the jitted step (``make_train_step``):
+    it skips the optimizer update — params and optimizer state bitwise
+    untouched — whenever the observed loss/grad-norm is non-finite or the
+    loss exceeds ``trainer.loss_ceiling``. This callback closes the loop on
+    the host side:
+
+    * maintains an EMA + variance of the (healthy) loss and sets
+      ``trainer.loss_ceiling = ema + z_threshold * std + min_spike`` once
+      ``warmup_steps`` healthy steps have seeded the statistics, so a
+      sudden spike trips the guard without hand-tuning a ceiling;
+    * counts consecutive guarded (skipped) steps as strikes; after
+      ``rollback_after`` strikes it rolls the TrainState *and* the data
+      iterator back to the newest checkpoint at-or-before the last healthy
+      step (checkpoints saved during the bad window are never trusted),
+      falling back to older checkpoints if the newest candidate fails
+      verification;
+    * records every intervention (skips, rollbacks) in ``interventions``
+      for the bench report, and raises
+      :class:`~repro.resilience.recovery.TrainingDivergedError` when the
+      strike limit hits with no restorable checkpoint — a run that cannot
+      self-heal fails loudly instead of training on garbage.
+
+    Order the supervisor AFTER the ``CheckpointCallback`` in the callback
+    list so a rollback joins the manager's in-flight write first.
+    """
+
+    def __init__(
+        self,
+        ckpt: Optional["CheckpointCallback"] = None,
+        rollback_after: int = 3,
+        z_threshold: float = 6.0,
+        ema_decay: float = 0.9,
+        warmup_steps: int = 5,
+        min_spike: float = 2.0,
+        log: Callable = print,
+    ):
+        self.ckpt = ckpt
+        self.rollback_after = rollback_after
+        self.z_threshold = z_threshold
+        self.ema_decay = ema_decay
+        self.warmup_steps = warmup_steps
+        self.min_spike = min_spike
+        self.log = log
+        self.strikes = 0
+        self.skips = 0
+        self.rollbacks = 0
+        self.interventions: List[Dict] = []
+        self._ema = 0.0
+        self._var = 0.0
+        self._healthy = 0
+        self.last_good_step = 0
+
+    def on_run_begin(self, trainer):
+        self.strikes = 0
+        self.last_good_step = int(jax.device_get(trainer.state.step))
+
+    def _ceiling(self) -> float:
+        if self._healthy < self.warmup_steps:
+            return float("inf")
+        return self._ema + self.z_threshold * float(np.sqrt(self._var)) + self.min_spike
+
+    def on_step_end(self, trainer, step, metrics, dt):
+        loss = float(jax.device_get(metrics["loss"]))
+        skipped = bool(jax.device_get(metrics.get("skipped", 0.0)))
+        if not skipped:
+            self.strikes = 0
+            self.last_good_step = step
+            d = self.ema_decay if self._healthy else 0.0
+            delta = loss - self._ema
+            self._ema += (1.0 - d) * delta
+            self._var = d * (self._var + (1.0 - d) * delta * delta)
+            self._healthy += 1
+            trainer.loss_ceiling = self._ceiling()
+            return
+        self.strikes += 1
+        self.skips += 1
+        self.interventions.append(
+            {"step": step, "kind": "skip", "loss": loss, "strikes": self.strikes}
+        )
+        self.log(
+            f"step {step:5d} ANOMALY loss {loss:.4g} > ceiling "
+            f"{trainer.loss_ceiling:.4g} (or non-finite) — update skipped "
+            f"[strike {self.strikes}/{self.rollback_after}]"
+        )
+        if self.strikes >= self.rollback_after:
+            self._rollback(trainer, step)
+
+    def _rollback(self, trainer, step: int):
+        from repro.checkpoint.manager import list_steps
+        from repro.resilience.recovery import (
+            CheckpointCorruptionError,
+            TrainingDivergedError,
+        )
+        from repro.train.state import restore_train_state
+
+        if self.ckpt is None:
+            raise TrainingDivergedError(
+                f"{self.strikes} consecutive anomalous steps at step {step} "
+                "and no CheckpointCallback to roll back through"
+            )
+        mgr = self.ckpt.manager
+        mgr.wait()
+        candidates = [
+            s for s in list_steps(mgr.directory) if s <= self.last_good_step
+        ]
+        for s in reversed(candidates):
+            try:
+                state, manifest = restore_train_state(
+                    mgr.directory, trainer.cfg, trainer.plan,
+                    trainer.tcfg.zero1, step=s,
+                )
+            except CheckpointCorruptionError:
+                continue
+            trainer.state = state
+            data_state = (manifest.get("meta") or {}).get("data_state")
+            if data_state is not None and hasattr(trainer.data_iter, "restore"):
+                trainer.data_iter.restore(data_state)
+            self.strikes = 0
+            self.rollbacks += 1
+            self.interventions.append(
+                {"step": step, "kind": "rollback", "to": s}
+            )
+            self.log(f"step {step:5d} ROLLBACK -> checkpoint step {s}")
+            return
+        raise TrainingDivergedError(
+            f"{self.rollback_after} consecutive anomalous steps at step "
+            f"{step} and no verified checkpoint at-or-before last good step "
+            f"{self.last_good_step} under {mgr.directory}"
+        )
+
+    def summary(self) -> Dict:
+        return {
+            "skipped_updates": self.skips,
+            "rollbacks": self.rollbacks,
+            "interventions": self.interventions,
+            "loss_ceiling": self._ceiling(),
+        }
+
+
 class CheckpointCallback(Callback):
     """Full-state periodic checkpoints through the async manager.
 

@@ -22,6 +22,8 @@ from repro.config import ModelConfig, TrainConfig, with_dispatcher
 from repro.models.model import loss_fn
 from repro.optim.adamw import AdamWState, adamw_update
 from repro.optim.schedule import cosine_schedule
+from repro.resilience import faults
+from repro.resilience.recovery import HangError
 from repro.sharding.rules import FoldingPlan
 from repro.train.callbacks import Callback, CheckpointCallback, LoggingCallback
 from repro.train.state import TrainState, create_train_state
@@ -34,12 +36,25 @@ def make_train_step(
     use_kernel: bool = False,
     microbatches: Optional[int] = None,
 ):
-    """Returns step(params, opt_state, batch, rng) -> (params, opt_state, metrics).
+    """Returns step(params, opt_state, batch, rng, guard=None)
+    -> (params, opt_state, metrics).
 
     With ``microbatches=m > 1`` the global batch is split into m sequential
     microbatches (lax.scan) whose fp32-accumulated grads feed ONE optimizer
     update — Megatron-style gradient accumulation, bounding per-microbatch
-    activation memory to 1/m (§Perf M4)."""
+    activation memory to 1/m (§Perf M4).
+
+    ``guard`` (optional dict of f32 scalars, traced — changing values never
+    retraces) arms the in-jit anomaly guard: grads are scaled by
+    ``grad_scale`` and the observed loss shifted by ``loss_shift`` (both
+    identity by default; the fault harness uses them to inject NaN grads /
+    loss spikes *inside* the jit), then the step is SKIPPED — params and
+    optimizer state (including ``opt.step``) selected back to their inputs
+    via ``jnp.where`` — when the observed loss or grad norm is non-finite
+    or the loss exceeds ``loss_ceiling``. A skipped step is bitwise clean:
+    no partially-applied update can leak. ``metrics["skipped"]`` reports
+    the verdict; ``metrics["loss"]`` reports the *observed* (shifted) loss
+    so the supervisor sees what tripped the guard."""
     m = microbatches if microbatches is not None else cfg.train_microbatches
 
     def grad_of(params, batch, rng):
@@ -47,7 +62,7 @@ def make_train_step(
             lambda p: loss_fn(cfg, plan, p, batch, rng, use_kernel), has_aux=True
         )(params)
 
-    def step(params, opt_state: AdamWState, batch, rng):
+    def step(params, opt_state: AdamWState, batch, rng, guard=None):
         B = jax.tree.leaves(batch)[0].shape[0]
         # clamp to a divisor of the actual batch (smoke tests use tiny B)
         m_eff = max(1, min(m, B))
@@ -81,6 +96,10 @@ def make_train_step(
             metrics = jax.tree.map(lambda v: v / m_eff, met_acc)
         else:
             (_, metrics), grads = grad_of(params, batch, rng)
+        if guard is not None:
+            grads = jax.tree.map(
+                lambda g: g * guard["grad_scale"].astype(g.dtype), grads
+            )
         lr = cosine_schedule(
             opt_state.step, tcfg.lr, tcfg.lr_min, tcfg.warmup_steps, tcfg.total_steps
         )
@@ -95,6 +114,22 @@ def make_train_step(
             sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
         )
         metrics = {**metrics, "lr": lr, "grad_norm": gnorm}
+        if guard is not None:
+            loss_obs = metrics["loss"] + guard["loss_shift"]
+            bad = (
+                ~jnp.isfinite(loss_obs)
+                | ~jnp.isfinite(gnorm)
+                | (loss_obs > guard["loss_ceiling"])
+            )
+            new_params = jax.tree.map(
+                lambda old, new: jnp.where(bad, old, new), params, new_params
+            )
+            new_opt = jax.tree.map(
+                lambda old, new: jnp.where(bad, old, new), opt_state, new_opt
+            )
+            metrics = {
+                **metrics, "loss": loss_obs, "skipped": bad.astype(jnp.float32)
+            }
         return new_params, new_opt, metrics
 
     return step
@@ -107,16 +142,20 @@ def make_state_step(
     use_kernel: bool = False,
     microbatches: Optional[int] = None,
 ):
-    """TrainState-level step: ``step(state, batch) -> (state, metrics)``.
+    """TrainState-level step: ``step(state, batch, guard=None) -> (state, metrics)``.
 
     The per-step PRNG split happens INSIDE the jit from ``state.rng``, so
     the key sequence is a pure function of the checkpointed state — exact
-    resume needs no host-side RNG bookkeeping."""
+    resume needs no host-side RNG bookkeeping. ``state.step`` counts batches
+    consumed and always advances (as does the RNG); a guard-skipped step
+    leaves only the *optimizer* clock (``opt_state.step``) untouched."""
     inner = make_train_step(cfg, tcfg, plan, use_kernel, microbatches)
 
-    def step(state: TrainState, batch):
+    def step(state: TrainState, batch, guard=None):
         rng, sk = jax.random.split(state.rng)
-        params, opt_state, metrics = inner(state.params, state.opt_state, batch, sk)
+        params, opt_state, metrics = inner(
+            state.params, state.opt_state, batch, sk, guard
+        )
         return TrainState(state.step + 1, params, opt_state, rng), metrics
 
     return step
@@ -139,6 +178,7 @@ class Trainer:
         dispatcher: Optional[str] = None,
         state: Optional[TrainState] = None,
         callbacks: Optional[Sequence[Callback]] = None,
+        step_timeout_s: Optional[float] = None,
     ):
         cfg = with_dispatcher(cfg, dispatcher)
         self.cfg, self.tcfg, self.plan = cfg, tcfg, plan
@@ -151,6 +191,11 @@ class Trainer:
         self.data_iter = data_iter
         self.callbacks = list(callbacks) if callbacks is not None else None
         self.history: list = []
+        # anomaly-guard knobs: the loop always passes a guard dict (scalar
+        # values — no retrace when the supervisor tightens the ceiling) and
+        # an optional hung-step watchdog (None = disabled)
+        self.loss_ceiling = float("inf")
+        self.step_timeout_s = step_timeout_s
 
     # seed-era attribute access (tests, examples, benchmarks read these)
     @property
@@ -185,27 +230,52 @@ class Trainer:
         log=print,
         callbacks: Optional[Sequence[Callback]] = None,
     ) -> Dict[str, list]:
-        """Run ``steps`` more steps. Global step numbering continues from
-        ``state.step`` (resume-aware); metrics/timing/checkpoints are the
-        callbacks' business."""
+        """Run ``steps`` more steps. Global step numbering is read back from
+        ``state.step`` each step (resume-aware, and a supervisor rollback
+        rewinds it naturally); metrics/timing/checkpoints are the callbacks'
+        business. Each step runs under the in-jit anomaly guard (see
+        :func:`make_train_step`): the ``train.step`` fault site can inject
+        NaN grads / loss spikes / a hang, and ``step_timeout_s`` (if set)
+        raises :class:`HangError` when one step exceeds its wall budget."""
         assert self.data_iter is not None
         cbs = list(callbacks) if callbacks is not None else self.callbacks
         if cbs is None:
             cbs = self.default_callbacks(log)
-        base = int(jax.device_get(self.state.step))
         for cb in cbs:
             cb.on_run_begin(self)
-        for i in range(steps):
+        for _ in range(steps):
             t0 = time.perf_counter()
             batch = {k: jnp.asarray(v) for k, v in next(self.data_iter).items()}
-            self.state, metrics = self.step_fn(self.state, batch)
+            guard = {
+                "loss_ceiling": jnp.float32(self.loss_ceiling),
+                "grad_scale": jnp.float32(1.0),
+                "loss_shift": jnp.float32(0.0),
+            }
+            for spec in faults.fire("train.step"):
+                if spec.kind == "nan_grads":
+                    guard["grad_scale"] = jnp.float32(float("nan"))
+                elif spec.kind == "loss_spike":
+                    guard["loss_shift"] = jnp.float32(spec.args.get("shift", 1e4))
+                elif spec.kind == "hang":
+                    time.sleep(
+                        spec.args.get(
+                            "seconds", 2.0 * (self.step_timeout_s or 0.05)
+                        )
+                    )
+            self.state, metrics = self.step_fn(self.state, batch, guard)
             # sync on the (tiny) metrics so per-step wall times are honest;
             # the big state buffers stay on device and the checkpoint
             # writer thread still overlaps subsequent steps
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
+            if self.step_timeout_s is not None and dt > self.step_timeout_s:
+                raise HangError(
+                    f"train step exceeded its {self.step_timeout_s:.3f}s wall "
+                    f"budget ({dt:.3f}s) — hung collective or wedged host"
+                )
+            step_no = int(jax.device_get(self.state.step))
             for cb in cbs:
-                cb.on_step_end(self, base + i + 1, metrics, dt)
+                cb.on_step_end(self, step_no, metrics, dt)
         for cb in cbs:
             cb.on_run_end(self)
         return {"history": self.history}

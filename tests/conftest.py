@@ -4,6 +4,11 @@ import os
 # 512-placeholder flag; distributed tests spawn subprocesses with their own
 # XLA_FLAGS (see test_distributed.py).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Strict dispatch throughout the suite: an illegal EP dispatcher is a loud
+# ValueError, never a silent allgather fallback that could mask dispatch
+# bugs. Tests that exercise the quiet-fallback path unset this explicitly
+# (monkeypatch.delenv / setenv to "0").
+os.environ.setdefault("REPRO_STRICT_DISPATCH", "1")
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402

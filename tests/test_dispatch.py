@@ -32,12 +32,22 @@ def _params(cfg, moe, seed=0):
     return jax.tree.map(lambda x: x.astype(jnp.float32), params)
 
 
-def test_registry_and_fallbacks():
+def test_registry_and_fallbacks(monkeypatch):
     cfg, moe = _cfg(dispatcher="sorted")
     assert isinstance(get_dispatcher(cfg, moe, None, 64, 2), SortedDispatcher)
-    # alltoall without an EP plan falls back to allgather
+    # alltoall without an EP plan: under the suite's strict default it is a
+    # loud config error, not a silent allgather downgrade...
     cfg2, moe2 = _cfg(dispatcher="alltoall")
-    assert isinstance(get_dispatcher(cfg2, moe2, None, 64, 2), AllGatherDispatcher)
+    with pytest.raises(ValueError, match="illegal"):
+        get_dispatcher(cfg2, moe2, None, 64, 2)
+    # ...and only with strict mode explicitly off does the historical quiet
+    # fallback apply (warning included)
+    monkeypatch.setenv("REPRO_STRICT_DISPATCH", "0")
+    with pytest.warns(UserWarning, match="falling back"):
+        assert isinstance(
+            get_dispatcher(cfg2, moe2, None, 64, 2), AllGatherDispatcher
+        )
+    monkeypatch.setenv("REPRO_STRICT_DISPATCH", "1")
     # expert-choice routing has no flat top-k assignment list to sort
     cfg3, moe3 = _cfg(dispatcher="sorted", router_type="expert_choice")
     assert isinstance(get_dispatcher(cfg3, moe3, None, 64, 2), AllGatherDispatcher)

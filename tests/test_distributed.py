@@ -15,7 +15,10 @@ def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # fake-device meshes live on the host (CPU) platform; pin it so the
+    # child never probes a real accelerator plugin (libtpu init can hang
+    # when the machine has the plugin but no device)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
         env=env, timeout=timeout,

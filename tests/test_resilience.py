@@ -1,0 +1,492 @@
+"""Chaos suite: every fault class the harness can inject is driven through
+its injection site and must be either AUTO-RECOVERED (with bitwise-correct
+continuation where the contract promises one) or rejected with a typed,
+actionable error. Each test asserts the injector's audit log too — a
+recovery test whose fault never fired proves nothing.
+
+Fault classes -> recovery contract (the matrix in README.md):
+
+* shard write failure   -> bounded retry + backoff; loud after exhaustion
+* torn / truncated shard-> structural verify catches; restore falls back to
+                           the newest VERIFIED checkpoint
+* bit-flip corruption   -> deep (CRC) verify catches what structure misses
+* NaN/Inf gradients     -> in-jit guard skips the update, bitwise clean
+* loss spike            -> guard skip -> strikes -> rollback -> parity
+* corrupt data batch    -> skip-and-log under a bounded budget, then raise
+* page-pool exhaustion  -> typed ShedError at admission; no deadlock
+* deadline overrun      -> on-time eviction, pages reclaimed, status set
+* hung step             -> watchdog HangError (train and serve)
+"""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, init_model
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_verified_step,
+    list_steps,
+    restore_tree,
+    verified_steps,
+    verify_checkpoint,
+)
+from repro.config import TrainConfig
+from repro.data.pipeline import make_train_iter
+from repro.resilience import (
+    CheckpointCorruptionError,
+    DataCorruptionError,
+    FaultSpec,
+    HangError,
+    InjectedFault,
+    ShardCorruptionError,
+    ShedError,
+    faults,
+    retry_io,
+)
+from repro.serving.engine import Request, ServingEngine
+from repro.train.callbacks import AnomalySupervisor, CheckpointCallback
+from repro.train.state import state_to_tree
+from repro.train.trainer import Trainer
+
+
+def _tcfg(steps=30, B=4, S=16, **kw):
+    return TrainConfig(global_batch=B, seq_len=S, lr=3e-3, lr_min=3e-4,
+                       warmup_steps=5, total_steps=steps, log_every=1, seed=3,
+                       **kw)
+
+
+def _tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(r.standard_normal((6, 4)), jnp.float32),
+        "b": {"c": jnp.asarray(r.standard_normal(8), jnp.float32).astype(jnp.bfloat16),
+              "step": jnp.int32(seed)},
+    }
+
+
+def _leaves_equal(t1, t2) -> bool:
+    l1, l2 = jax.tree.leaves(t1), jax.tree.leaves(t2)
+    return len(l1) == len(l2) and all(
+        np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(l1, l2)
+    )
+
+
+def _a_shard_file(ckpt_dir, step):
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    files = sorted(f for f in os.listdir(d) if f.endswith(".npy"))
+    return os.path.join(d, files[0])
+
+
+# -- the harness itself ------------------------------------------------------
+
+
+def test_injector_is_deterministic_and_scoped():
+    spec = FaultSpec("site.x", "boom", at=1, count=2)
+    periodic = FaultSpec("site.y", "tick", at=1, every=3)
+    with faults.inject(spec, periodic, seed=7) as inj:
+        hits = [bool(faults.fire("site.x")) for _ in range(5)]
+        assert hits == [False, True, True, False, False]
+        ticks = [bool(faults.fire("site.y")) for _ in range(7)]
+        assert ticks == [False, True, False, False, True, False, False]
+        assert inj.fired == [
+            ("site.x", "boom", 1), ("site.x", "boom", 2),
+            ("site.y", "tick", 1), ("site.y", "tick", 4),
+        ]
+        assert inj.events("site.x") == 5
+        # nesting restores the outer injector on exit
+        with faults.inject(FaultSpec("site.x", "inner", at=0)) as inner:
+            assert faults.fire("site.x")[0].kind == "inner"
+            assert inner is faults.active()
+        assert faults.active() is inj
+    assert faults.active() is None
+    assert faults.fire("site.x") == []  # no injector -> no-op
+
+
+def test_retry_io_backoff_and_exhaustion():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky(fail_times):
+        calls["n"] += 1
+        if calls["n"] <= fail_times:
+            raise OSError("transient")
+        return "ok"
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert retry_io(flaky, 2, attempts=3, sleep=sleeps.append) == "ok"
+    assert calls["n"] == 3 and sleeps == [0.01, 0.02]  # exponential backoff
+    calls["n"] = 0
+    with pytest.raises(OSError), warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        retry_io(flaky, 99, attempts=3, sleep=sleeps.append)
+
+
+# -- checkpoint integrity ----------------------------------------------------
+
+
+def test_transient_write_fault_recovered_by_retry(tmp_path):
+    d = str(tmp_path / "ck")
+    m = CheckpointManager(d, async_save=False)
+    with faults.inject(FaultSpec("ckpt.shard_write", "write_fail", at=1)) as inj:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            m.save(_tree(1), 1)
+        assert inj.fired == [("ckpt.shard_write", "write_fail", 1)]
+        assert any("retrying" in str(x.message) for x in w)
+    verify_checkpoint(os.path.join(d, "step_00000001"), deep=True)
+    assert _leaves_equal(restore_tree(d)[0], _tree(1))
+
+
+def test_persistent_write_fault_is_loud_and_preserves_last_good(tmp_path):
+    d = str(tmp_path / "ck")
+    m = CheckpointManager(d, async_save=False)
+    m.save(_tree(1), 1)
+    with faults.inject(
+        FaultSpec("ckpt.shard_write", "write_fail", at=0, count=10_000)
+    ), warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(InjectedFault):
+            m.save(_tree(2), 2)
+    assert list_steps(d) == [1]  # tmp dir never promoted
+    assert _leaves_equal(restore_tree(d)[0], _tree(1))
+
+
+@pytest.mark.parametrize("kind", ["torn", "bitflip"])
+def test_corrupt_write_falls_back_to_newest_verified(tmp_path, kind):
+    """Corruption injected at write time (every shard of step 2): restore
+    must land on step 1 and warn — never silently return garbage."""
+    d = str(tmp_path / "ck")
+    m = CheckpointManager(d, async_save=False)
+    m.save(_tree(1), 1)
+    with faults.inject(
+        FaultSpec("ckpt.shard_write", kind, at=0, count=10_000), seed=5
+    ) as inj:
+        m.save(_tree(2), 2)
+        assert inj.fired, "corruption fault never fired"
+    assert list_steps(d) == [1, 2]  # step 2 committed, but rotten
+    assert latest_verified_step(d) == 1
+    if kind == "bitflip":
+        # the structural pass cannot see a flipped bit; the CRC must
+        verify_checkpoint(os.path.join(d, "step_00000002"), deep=False)
+    with pytest.raises(ShardCorruptionError):
+        verify_checkpoint(os.path.join(d, "step_00000002"), deep=True)
+    with pytest.warns(UserWarning, match="skipping"):
+        tree, manifest = m.restore()
+    assert manifest["step"] == 1 and _leaves_equal(tree, _tree(1))
+    assert m.restore_fallbacks == 1
+
+
+def test_posthoc_truncation_detected_structurally(tmp_path):
+    """A shard truncated after commit (torn replica, disk rot) fails even
+    the cheap structural verify once the file drops below its recorded
+    payload size (the structural bound excludes the npy header, so cut
+    deep); any truncation at all fails the deep pass."""
+    d = str(tmp_path / "ck")
+    m = CheckpointManager(d, async_save=False)
+    m.save(_tree(1), 1)
+    faults.truncate_file(_a_shard_file(d, 1), keep_fraction=0.2)
+    with pytest.raises(ShardCorruptionError, match="torn write"):
+        verify_checkpoint(os.path.join(d, "step_00000001"), deep=False)
+    with pytest.raises(ShardCorruptionError):
+        verify_checkpoint(os.path.join(d, "step_00000001"), deep=True)
+
+
+def test_pinned_restore_never_falls_back(tmp_path):
+    d = str(tmp_path / "ck")
+    m = CheckpointManager(d, async_save=False)
+    m.save(_tree(1), 1)
+    m.save(_tree(2), 2)
+    faults.flip_bit(_a_shard_file(d, 2))
+    with pytest.raises(CheckpointCorruptionError, match="step 2"):
+        restore_tree(d, step=2)
+
+
+def test_all_corrupt_raises_listing_every_step(tmp_path):
+    d = str(tmp_path / "ck")
+    m = CheckpointManager(d, async_save=False)
+    m.save(_tree(1), 1)
+    m.save(_tree(2), 2)
+    for s in (1, 2):
+        faults.flip_bit(_a_shard_file(d, s))
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        restore_tree(d)
+    assert "step 1" in str(ei.value) and "step 2" in str(ei.value)
+
+
+def test_retention_counts_only_verified(tmp_path):
+    """keep_last=1 with a corrupt latest: pruning must NOT evict the last
+    good checkpoint, and the corrupt dir is reclaimed only once a newer
+    verified step supersedes it."""
+    d = str(tmp_path / "ck")
+    m = CheckpointManager(d, keep_last=1, async_save=False)
+    m.save(_tree(1), 1)
+    with faults.inject(FaultSpec("ckpt.shard_write", "torn", at=0, count=10_000)):
+        m.save(_tree(2), 2)  # committed but every shard torn
+    # prune at step 2's commit saw verified=[1]: step 1 survives
+    assert list_steps(d) == [1, 2]
+    assert verified_steps(d, deep=True) == [1]
+    with pytest.warns(UserWarning, match="skipping"):
+        tree, manifest = m.restore()
+    assert manifest["step"] == 1
+    m.save(_tree(3), 3)  # a new verified step supersedes both
+    assert list_steps(d) == [3]
+    assert _leaves_equal(restore_tree(d)[0], _tree(3))
+
+
+def test_transient_read_fault_recovered_by_retry(tmp_path):
+    d = str(tmp_path / "ck")
+    m = CheckpointManager(d, async_save=False)
+    m.save(_tree(1), 1)
+    with faults.inject(FaultSpec("ckpt.shard_read", "read_fail", at=0)) as inj, \
+            warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        tree, _ = restore_tree(d, verify=False)
+    assert inj.fired and _leaves_equal(tree, _tree(1))
+
+
+# -- training anomaly supervision -------------------------------------------
+
+
+def _trainer(cfg, tcfg, **kw):
+    it = make_train_iter(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch,
+                         tcfg.blend_ratio, tcfg.seed)
+    return Trainer(cfg, tcfg, data_iter=it, **kw)
+
+
+def test_nan_step_skipped_bitwise_clean():
+    """An injected NaN-gradient step must leave params AND optimizer state
+    bitwise untouched (no partially-applied update), keep the optimizer
+    clock still, and still advance the batch/RNG stream."""
+    cfg = tiny_dense(num_layers=1, vocab_size=256)
+    tr = _trainer(cfg, _tcfg())
+    sup = AnomalySupervisor(rollback_after=100)  # observe only, no rollback
+    tr.run(2, log=lambda *_: None, callbacks=[sup])
+    before = jax.device_get(state_to_tree(tr.state))
+    with faults.inject(FaultSpec("train.step", "nan_grads", at=0)) as inj:
+        tr.run(1, log=lambda *_: None, callbacks=[sup])
+        assert inj.fired == [("train.step", "nan_grads", 0)]
+    after = jax.device_get(state_to_tree(tr.state))
+    assert _leaves_equal(after["params"], before["params"])
+    assert _leaves_equal(after["opt"]["master"], before["opt"]["master"])
+    assert _leaves_equal(after["opt"]["m"], before["opt"]["m"])
+    assert int(after["opt"]["step"]) == int(before["opt"]["step"])
+    assert int(after["step"]) == int(before["step"]) + 1  # batch consumed
+    assert not np.array_equal(after["rng"], before["rng"])
+    assert sup.skips == 1 and sup.rollbacks == 0
+    # and the run self-heals: the next (clean) step trains normally
+    tr.run(1, log=lambda *_: None, callbacks=[sup])
+    assert not _leaves_equal(
+        jax.device_get(tr.state.params), after["params"]
+    )
+
+
+def test_spike_rollback_recovers_to_bitwise_parity(tmp_path):
+    """Loss spikes past the strike limit force a rollback; after recovery
+    the run must continue to the SAME TrainState, bitwise, as an
+    uninterrupted run — the acceptance bar for supervised recovery."""
+    cfg = tiny_dense(num_layers=1, vocab_size=256)
+    tcfg = _tcfg()
+    target = 10
+    straight = _trainer(cfg, tcfg)
+    straight.run(target, log=lambda *_: None)
+    ref = jax.device_get(state_to_tree(straight.state))
+
+    tr = _trainer(cfg, tcfg)
+    ck = CheckpointCallback(str(tmp_path / "ck"), every=2, async_save=True)
+    sup = AnomalySupervisor(ckpt=ck, rollback_after=2, warmup_steps=3)
+    cbs = [ck, sup]
+    # 10 loop iterations: 5 clean, 2 spiked-and-skipped (strikes 1, 2 ->
+    # rollback to checkpoint step 4), 3 replayed -> state.step lands at 7
+    with faults.inject(
+        FaultSpec("train.step", "loss_spike", at=5, count=2,
+                  args={"shift": 1e5})
+    ) as inj:
+        tr.run(target, log=lambda *_: None, callbacks=cbs)
+        assert len(inj.fired) == 2
+    assert sup.rollbacks == 1 and sup.skips == 2
+    done = int(jax.device_get(tr.state.step))
+    assert done < target  # the rollback rewound the global step
+    tr.run(target - done, log=lambda *_: None, callbacks=cbs)
+    got = jax.device_get(state_to_tree(tr.state))
+    assert _leaves_equal(got, ref), "recovered run diverged from clean run"
+
+
+def test_supervisor_diverged_without_checkpoint():
+    from repro.resilience import TrainingDivergedError
+
+    cfg = tiny_dense(num_layers=1, vocab_size=256)
+    tr = _trainer(cfg, _tcfg())
+    sup = AnomalySupervisor(ckpt=None, rollback_after=2)
+    with faults.inject(
+        FaultSpec("train.step", "nan_grads", at=0, count=10)
+    ), pytest.raises(TrainingDivergedError):
+        tr.run(4, log=lambda *_: None, callbacks=[sup])
+
+
+def test_train_hang_watchdog():
+    cfg = tiny_dense(num_layers=1, vocab_size=256)
+    tr = _trainer(cfg, _tcfg())
+    tr.run(1, log=lambda *_: None)  # pay compile outside the watchdog
+    tr.step_timeout_s = 30.0
+    tr.run(1, log=lambda *_: None)  # sane budget passes
+    tr.step_timeout_s = 0.05
+    with faults.inject(
+        FaultSpec("train.step", "hang", at=0, args={"seconds": 0.2})
+    ), pytest.raises(HangError, match="wall"):
+        tr.run(1, log=lambda *_: None)
+
+
+# -- data pipeline -----------------------------------------------------------
+
+
+def test_corrupt_batch_skipped_with_stream_parity():
+    clean = make_train_iter(256, 16, 4, seed=11)
+    ref = [next(clean) for _ in range(4)]
+    it = make_train_iter(256, 16, 4, seed=11)
+    with faults.inject(
+        FaultSpec("data.batch", "corrupt_batch", at=1)
+    ) as inj, pytest.warns(UserWarning, match="corrupt"):
+        got = [next(it) for _ in range(3)]
+        assert inj.fired == [("data.batch", "corrupt_batch", 1)]
+    # batch 1 was dropped: the faulted stream is the clean one minus it
+    np.testing.assert_array_equal(got[0]["tokens"], ref[0]["tokens"])
+    np.testing.assert_array_equal(got[1]["tokens"], ref[2]["tokens"])
+    np.testing.assert_array_equal(got[2]["tokens"], ref[3]["tokens"])
+    assert it.state()["skipped"] == [1]
+    # the snapshot restores the skip bookkeeping too
+    it2 = make_train_iter(256, 16, 4, seed=11).restore(it.state())
+    assert it2.state()["skipped"] == [1]
+    np.testing.assert_array_equal(next(it2)["tokens"], next(clean)["tokens"])
+
+
+def test_corrupt_batch_budget_exhaustion_raises():
+    it = make_train_iter(256, 16, 4, seed=11, skip_budget=2)
+    with faults.inject(
+        FaultSpec("data.batch", "corrupt_batch", at=0, count=100)
+    ), warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(DataCorruptionError, match="budget"):
+            next(it)
+
+
+def test_genuinely_bad_tokens_caught_without_injection():
+    """Validation is not injection-only: out-of-range ids from the real
+    pipeline are caught too."""
+    it = make_train_iter(256, 16, 4, seed=11, skip_budget=1)
+    real = it._draw
+
+    def poisoned():
+        b = real()
+        t = b["tokens"].copy()
+        t[0, 0] = -3
+        b["tokens"] = t
+        return b
+
+    it._draw = poisoned
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(DataCorruptionError):
+            next(it)
+
+
+# -- serving degradation -----------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = tiny_dense(num_layers=1, vocab_size=64)
+    return cfg, init_model(cfg, seed=0)
+
+
+def _mk_reqs(n, L=10, mnt=6, seed=7, vocab=64, **kw):
+    r = np.random.default_rng(seed)
+    return [
+        Request(i, r.integers(1, vocab, size=L).astype(np.int32),
+                max_new_tokens=mnt, **kw)
+        for i in range(n)
+    ]
+
+
+def test_admission_sheds_loudly_not_deadlocks(serve_setup):
+    cfg, params = serve_setup
+    eng = ServingEngine(cfg, params, cache_mode="paged", max_batch=2,
+                        max_seq=64, page_size=8, num_pages=8,
+                        max_queue=2, shed_watermark=1)
+    reqs = _mk_reqs(5)
+    accepted, shed = [], []
+    for r in reqs:
+        try:
+            eng.submit(r)
+            accepted.append(r)
+        except ShedError:
+            shed.append(r.rid)
+    assert shed, "overload never shed"
+    assert eng.sched.shed_count == len(shed)
+    for _ in range(200):
+        if not eng.sched.has_work:
+            break
+        eng.step()
+    assert all(len(r.output) == r.max_new_tokens for r in accepted)
+    h = eng.health()
+    assert h["shed_count"] == len(shed) and h["resident_pages"] == 0
+
+
+def test_pool_exhaustion_alloc_faults_recover_with_parity(serve_setup):
+    """Transient page-allocation failures (the pool-exhaustion fault class)
+    stall the affected request a step; outputs stay token-for-token equal
+    to the clean run."""
+    cfg, params = serve_setup
+    outs = {}
+    for label, specs in [
+        ("clean", []),
+        ("faulty", [FaultSpec("serving.alloc", "alloc_fail", at=1, count=3)]),
+    ]:
+        eng = ServingEngine(cfg, params, cache_mode="paged", max_batch=2,
+                            max_seq=64, page_size=8)
+        with faults.inject(*specs) as inj:
+            outs[label] = eng.run(_mk_reqs(3), max_steps=300)
+            if specs:
+                assert inj.fired, "alloc fault never fired"
+    assert outs["clean"] == outs["faulty"]
+
+
+def test_deadline_eviction_reclaims_pages(serve_setup):
+    cfg, params = serve_setup
+    eng = ServingEngine(cfg, params, cache_mode="paged", max_batch=2,
+                        max_seq=64, page_size=8, deadline_steps=4)
+    # rid 2 carries a per-request deadline long enough to finish
+    reqs = _mk_reqs(2, mnt=40) + _mk_reqs(1, mnt=4, seed=9)
+    reqs[2].rid = 2
+    reqs[2].deadline_steps = 1000
+    out = eng.run(reqs, max_steps=300)
+    assert reqs[0].status == "deadline" and reqs[1].status == "deadline"
+    assert reqs[2].status == "ok" and len(out[2]) == 4
+    h = eng.health()
+    assert h["deadline_evictions"] == 2
+    assert h["resident_pages"] == 0  # evicted pages reclaimed
+    assert h["free_pages"] == h["num_pages"]
+
+
+def test_serving_hang_watchdog(serve_setup):
+    cfg, params = serve_setup
+    eng = ServingEngine(cfg, params, cache_mode="paged", max_batch=2,
+                        max_seq=64, page_size=8, step_timeout_s=60.0)
+    eng.submit(_mk_reqs(1)[0])
+    eng.step()  # compile prefill under a generous budget
+    eng.step()  # ... and decode
+    eng.step_timeout_s = 0.05
+    with faults.inject(
+        FaultSpec("serving.step", "hang", at=0, args={"seconds": 0.2})
+    ), pytest.raises(HangError, match="wall"):
+        eng.step()
+
+
+def test_ring_mode_rejects_paged_only_knobs(serve_setup):
+    cfg, params = serve_setup
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params, cache_mode="ring", deadline_steps=5)

@@ -21,7 +21,10 @@ def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # fake-device meshes live on the host (CPU) platform; pin it so the
+    # child never probes a real accelerator plugin (libtpu init can hang
+    # when the machine has the plugin but no device)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
         env=env, timeout=timeout,
@@ -41,6 +44,11 @@ from repro.sharding.rules import init_from_decls
 
 cfg = smoke_config(get_config("llama3-e8t2")).replace(dtype="float32")
 cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=None))
+# the single-host oracles have no EP plan, so the e8t2 default 'alltoall'
+# would trip strict dispatch (REPRO_STRICT_DISPATCH=1 in tests/CI);
+# 'allgather' is what the fallback resolved to, and the mesh path still
+# upgrades it to 'a2a_overlap' (engine defaults padded-CF dispatchers)
+cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatcher="allgather"))
 params = jax.tree.map(
     lambda x: x.astype("float32") if x.dtype == "bfloat16" else x,
     init_from_decls(model_decl(cfg), jax.random.PRNGKey(0)),

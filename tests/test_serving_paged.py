@@ -19,10 +19,18 @@ from repro.serving.engine import Request, ServingEngine
 def _dropless(cfg):
     """Finite-CF drop sets depend on dispatch-group token counts, which
     legitimately differ between full prefill and chunked prefill — parity
-    checks run dropless, like the prefill==forward equivalence tests."""
+    checks run dropless, like the prefill==forward equivalence tests.
+
+    Also pins the e8t2 default 'alltoall' to 'allgather': this suite is
+    single-host (no EP plan), where alltoall would trip the strict-dispatch
+    gate (REPRO_STRICT_DISPATCH=1 in tests/CI) instead of quietly falling
+    back — 'allgather' is exactly what the fallback resolved to."""
     if cfg.moe is None:
         return cfg
-    return cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=None))
+    moe = dataclasses.replace(cfg.moe, capacity_factor=None)
+    if moe.dispatcher == "alltoall":
+        moe = dataclasses.replace(moe, dispatcher="allgather")
+    return cfg.replace(moe=moe)
 
 
 def _requests(cfg, seed, n=6, lmin=3, lmax=40, new=(3, 8)):
