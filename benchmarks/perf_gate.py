@@ -56,6 +56,13 @@ _HIGHER_BETTER = ("per_s",)
 _INFO_MARKERS = ("anomaly", "shed", "evict", "skipped", "rollback",
                  "fallback", "intervention")
 
+# Sections that must exist in the FRESH artifact even when the committed
+# baseline predates them — a bench edit that silently drops a coverage
+# section must fail here, not ride through as "new keys pass".
+REQUIRED_SECTIONS = {
+    "BENCH_serving.json": ("prefix_reuse", "speculation"),
+}
+
 
 def _is_timing(key: str) -> bool:
     return any(m in key for m in _TIME_MARKERS)
@@ -180,6 +187,11 @@ def gate(artifacts=ARTIFACTS, baseline_dir=BASELINE_DIR, root=ROOT,
             base = json.load(f)
         with open(fresh_path) as f:
             fresh = json.load(f)
+        for sec in REQUIRED_SECTIONS.get(name, ()):
+            if sec not in fresh:
+                failures.append(
+                    f"{name}: required section '{sec}' missing from artifact"
+                )
         compare(base, fresh, name, failures, notes)
     if verbose:
         for n in notes:

@@ -57,7 +57,26 @@ def main(argv=None):
     ap.add_argument("--shed-watermark", type=int, default=0,
                     help="shed submits when free KV pages minus backlog dip "
                          "below this reserve (0 = off; paged mode only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the page pool: requests "
+                         "sharing a prompt stem reuse its KV pages (paged "
+                         "mode only; the demo prompts share a stem so the "
+                         "cache actually hits)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per step on "
+                         "a dense drafter, verify in one step (paged mode "
+                         "only). For an MoE --arch the drafter is its dense "
+                         "parent and the served params are upcycled from it "
+                         "(the paper's function-preserving pair); otherwise "
+                         "the drafter self-speculates with the same params "
+                         "unless --draft-arch says otherwise")
+    ap.add_argument("--draft-arch", default=None,
+                    help="drafter architecture for --speculate (must share "
+                         "the tokenizer/vocab; independently initialized, so "
+                         "expect low acceptance — a correctness demo)")
     args = ap.parse_args(argv)
+    if (args.speculate or args.prefix_cache) and args.cache_mode != "paged":
+        ap.error("--speculate/--prefix-cache require --cache-mode paged")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -71,18 +90,53 @@ def main(argv=None):
         from repro.launch.mesh import make_serving_mesh
 
         mesh = make_serving_mesh(args.dp, args.ep)
-    engine = ServingEngine(cfg, params, max_batch=args.max_batch,
-                           max_seq=args.prompt_len + args.max_new + 8,
-                           dispatcher=args.dispatcher, use_kernel=args.use_kernel,
-                           cache_mode=args.cache_mode, page_size=args.page_size,
-                           num_pages=args.num_pages,
-                           prefill_chunk=args.prefill_chunk, mesh=mesh,
-                           deadline_steps=args.deadline_steps or None,
-                           max_queue=args.max_queue or None,
-                           shed_watermark=args.shed_watermark or None)
+    common = dict(max_batch=args.max_batch,
+                  max_seq=args.prompt_len + args.max_new + 8,
+                  dispatcher=args.dispatcher, use_kernel=args.use_kernel,
+                  cache_mode=args.cache_mode, page_size=args.page_size,
+                  num_pages=args.num_pages,
+                  prefill_chunk=args.prefill_chunk, mesh=mesh,
+                  deadline_steps=args.deadline_steps or None,
+                  max_queue=args.max_queue or None,
+                  shed_watermark=args.shed_watermark or None,
+                  prefix_cache=args.prefix_cache)
+    if args.speculate:
+        from repro.serving.speculative import SpeculativeEngine
+
+        if args.draft_arch is not None:
+            dcfg = get_config(args.draft_arch)
+            if args.smoke:
+                dcfg = smoke_config(dcfg)
+            dparams = init_from_decls(model_decl(dcfg), jax.random.PRNGKey(args.seed + 1))
+            engine = SpeculativeEngine(cfg, params, dcfg, dparams,
+                                       draft_k=args.speculate, **common)
+        elif cfg.moe is not None:
+            # the paper's pairing: serve params upcycled from the dense
+            # parent, draft on the parent itself (function-preserving init
+            # -> near-100% acceptance)
+            dense_cfg = cfg.replace(name=f"{cfg.name}-parent", family="dense",
+                                    moe=None)
+            dense_params = init_from_decls(
+                model_decl(dense_cfg), jax.random.PRNGKey(args.seed)
+            )
+            engine = SpeculativeEngine.from_upcycle(
+                dense_cfg, cfg, dense_params, draft_k=args.speculate, **common
+            )
+        else:
+            engine = SpeculativeEngine(cfg, params, cfg, params,
+                                       draft_k=args.speculate, **common)
+    else:
+        engine = ServingEngine(cfg, params, **common)
     rng = np.random.default_rng(args.seed)
+
+    def _prompt():
+        return rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
+
+    stem = _prompt()[: args.prompt_len // 2]  # shared head for --prefix-cache
     reqs = [
-        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+        Request(rid=i,
+                prompt=(np.concatenate([stem, _prompt()[len(stem):]])
+                        if args.prefix_cache else _prompt()),
                 max_new_tokens=args.max_new)
         for i in range(args.requests)
     ]
@@ -122,6 +176,18 @@ def main(argv=None):
           + (f", page util {kv['page_utilization']:.2f}, "
              f"peak pages {kv['peak_used_pages']}/{kv['num_pages']}"
              if args.cache_mode == "paged" else ""))
+    if args.prefix_cache:
+        p = kv["prefix"]
+        print(f"  prefix cache: {p['hits']}/{p['lookups']} hits, "
+              f"{p['hit_tokens']} prompt tokens served from cache, "
+              f"{p['cow_clones']} COW clones, "
+              f"{p['resident_pages']} pages resident")
+    if args.speculate:
+        s = kv["speculation"]
+        print(f"  speculation: k={s['draft_k']}, acceptance "
+              f"{s['acceptance_rate']:.2%} "
+              f"({s['accepted_tokens']}/{s['drafted_tokens']} drafts over "
+              f"{s['spec_steps']} verify steps)")
     for rid, out in sorted(outputs.items())[:4]:
         print(f"  req {rid}: {out[:12]}{'...' if len(out) > 12 else ''}")
     return outputs

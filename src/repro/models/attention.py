@@ -299,6 +299,14 @@ def gqa_apply(
         # cache_view: page_table (B, maxP); write_page/write_offset (B, S)
         # physical scatter targets (invalid positions -> the trash page);
         # k_pos (B, maxP*ps) logical slot validity; seq_lens (B,).
+        # S covers decode (1), chunked prefill, AND the speculative-decode
+        # verify step (S = draft_k + 1, per-row lengths via seq_lens): the
+        # gather path below is length-generic, only the S==1 Pallas decode
+        # kernel is specialized. Write discipline with a prefix cache: a
+        # row's table may reference *shared* (refcounted) prefix pages, but
+        # wp only ever targets pages past the row's prefilled boundary —
+        # the scheduler COW-clones a shared page before any chunk can
+        # scatter into it, so shared KV is read-only here by construction.
         wp, wo = cache_view["write_page"], cache_view["write_offset"]
         k_cache = cache["k"].at[wp, wo].set(k)
         v_cache = cache["v"].at[wp, wo].set(v)

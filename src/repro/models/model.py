@@ -247,6 +247,7 @@ def paged_forward(
     valid_len: jax.Array,  # (B,) real tokens in this chunk (0 = idle slot)
     use_kernel: bool = False,
     trash_page: Optional[jax.Array] = None,  # (B,) per-row trash page id
+    return_all_logits: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One forward over the page-table cache view: S > 1 is a prefill chunk
     (attends to previously-written pages + the chunk itself, causally),
@@ -260,7 +261,13 @@ def paged_forward(
     EP x DP engine passes each batch row its DP shard's own trash page so
     idle writes never cross the shard's stride of the page axis.
     Returns (fp32 logits (B, padded_vocab) at each row's last valid
-    position, updated pool)."""
+    position, updated pool).
+
+    ``return_all_logits=True`` unembeds every chunk position instead —
+    logits (B, S, padded_vocab) — which is what the speculative-decoding
+    verify step needs: position j's logits give the target model's next
+    token after draft token j, so one chunk scores k drafts at once
+    (positions >= valid_len are pad garbage; callers mask by length)."""
     B, S = tokens.shape
     leaf = jax.tree.leaves(pool["stack"])[0]  # (P, num_pages, ps, KV, hd)
     num_pages, ps = leaf.shape[1], leaf.shape[2]
@@ -295,6 +302,11 @@ def paged_forward(
         cache=pool["stack"], cache_view=cache_view, use_kernel=use_kernel,
     )
     x = norm_apply(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    if return_all_logits:
+        logits = unembed_apply(params["embed"], x)  # (B, S, V)
+        if plan is not None:
+            logits = plan.constrain(logits, "batch", None, "vocab")
+        return logits, {"stack": new_stack}
     last = jnp.maximum(valid_len - 1, 0)
     xl = x[jnp.arange(B), last][:, None]  # (B, 1, D)
     logits = unembed_apply(params["embed"], xl)[:, 0]

@@ -1,6 +1,8 @@
 """Serving subsystem: continuous-batching engine with ring-buffer and
-paged-KV (block-table) cache backends — see engine.py, kv_cache.py,
-scheduler.py."""
+paged-KV (block-table) cache backends, radix prefix-cache KV reuse, and
+dense-drafter speculative decoding — see engine.py, kv_cache.py,
+scheduler.py, speculative.py."""
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
-from repro.serving.kv_cache import PagePool  # noqa: F401
+from repro.serving.kv_cache import PagePool, PrefixCache  # noqa: F401
 from repro.serving.scheduler import ChunkedScheduler, SchedulerConfig  # noqa: F401
+from repro.serving.speculative import SpeculativeEngine  # noqa: F401

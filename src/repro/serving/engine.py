@@ -56,7 +56,9 @@ from repro.models.model import (
 )
 from repro.serving.kv_cache import (
     PagePool,
+    copy_pages,
     init_paged_pool,
+    kv_bytes_live,
     kv_bytes_resident,
     kv_bytes_resident_per_shard,
     permute_pool,
@@ -103,6 +105,7 @@ class ServingEngine:
         max_queue: Optional[int] = None,
         shed_watermark: Optional[int] = None,
         step_timeout_s: Optional[float] = None,
+        prefix_cache: bool = False,
     ):
         # MoE decode runs through the same dispatch subsystem as training;
         # `dispatcher` overrides the config's token dispatcher (e.g. "sorted"
@@ -110,6 +113,14 @@ class ServingEngine:
         # and (paged mode) the paged-attention decode kernel. `mesh` turns
         # on the EP x DP sharded mode (see module docstring).
         assert cache_mode in ("ring", "paged"), cache_mode
+        if prefix_cache and cache_mode != "paged":
+            raise ValueError("prefix_cache requires cache_mode='paged'")
+        if prefix_cache and cfg.sliding_window is not None:
+            raise ValueError(
+                "prefix_cache is incompatible with sliding_window: shared "
+                "prefix pages must be immutable, a window releases them"
+            )
+        self.prefix_caching = prefix_cache
         if cache_mode == "ring" and (deadline_steps is not None
                                      or shed_watermark is not None):
             raise ValueError(
@@ -207,6 +218,8 @@ class ServingEngine:
             plan=self.plan if self.mesh is not None else None,
         )
         self.page_pool = PagePool(num_pages, page_size, num_shards=dp)
+        if self.prefix_caching:
+            self.page_pool.enable_prefix_cache()
         self.sched = ChunkedScheduler(
             SchedulerConfig(
                 max_batch=self.max_batch, page_size=page_size,
@@ -221,6 +234,7 @@ class ServingEngine:
         self._rid2req: Dict[int, Request] = {}
         self._next_np = np.zeros((self.max_batch,), np.int32)
         self.peak_used_pages = 0
+        self.peak_live_pages = 0  # used minus reclaimable (refcount-0) cache
         # per-slot trash page: idle/padded writes of a batch row land in its
         # own DP shard's trash so they never cross the pool's shard strides
         # (at dp=1 this is the legacy last-device-page convention)
@@ -255,6 +269,8 @@ class ServingEngine:
             self.sched.submit(
                 req.rid, len(req.prompt), req.max_new_tokens,
                 deadline_steps=req.deadline_steps,
+                tokens=(np.asarray(req.prompt, np.int32)
+                        if self.prefix_caching else None),
             )  # may shed — then the rid is never registered
             self._rid2req[req.rid] = req
         else:
@@ -362,10 +378,31 @@ class ServingEngine:
             req = self._rid2req[rid]
             req.done = True
             req.status = "deadline"
+        if plan.cow_copies:
+            self._apply_cow(plan.cow_copies)
         # sample the peak right after planning (allocation) — on_token below
         # may free a finished request's pages within the same step
-        self.peak_used_pages = max(self.peak_used_pages, self.page_pool.used_pages)
+        self._sample_peaks()
         n_active = len(self.sched.running)
+        self._run_prefills(plan)
+        if plan.decode_slots:
+            self._run_decode(plan)
+            self._sample_peaks()  # decode may have allocated (lookahead)
+        return n_active
+
+    def _sample_peaks(self) -> None:
+        self.peak_used_pages = max(self.peak_used_pages, self.page_pool.used_pages)
+        self.peak_live_pages = max(
+            self.peak_live_pages,
+            self.page_pool.used_pages - self.page_pool.evictable_pages,
+        )
+
+    def _apply_cow(self, copies) -> None:
+        """Materialize prefix-cache COW clones on the device pool(s) before
+        any chunk of this step scatters into the clone."""
+        self.pool_dev = copy_pages(self.pool_dev, copies)
+
+    def _run_prefills(self, plan) -> None:
         for c in plan.prefills:
             req = self._rid2req[c.rid]
             # after preemption the generated tokens are prompt suffix
@@ -376,38 +413,51 @@ class ServingEngine:
             toks = np.zeros((1, self.prefill_chunk), np.int32)
             toks[0, : c.length] = full[c.start : c.start + c.length]
             bt = jnp.asarray(self.sched.block_table(c.slot)[None], jnp.int32)
-            logits, self.pool_dev = self._chunk_fn(
-                self.params, self.pool_dev, jnp.asarray(toks),
-                jnp.asarray([c.start], jnp.int32), bt,
+            logits = self._prefill_chunk_device(
+                jnp.asarray(toks), jnp.asarray([c.start], jnp.int32), bt,
                 jnp.asarray([c.length], jnp.int32),
                 jnp.asarray(self._trash_np[c.slot : c.slot + 1]),
             )
+            if self.prefix_caching:
+                # the chunk's pages now hold real KV: promote the full
+                # original-prompt pages covered so far into the trie
+                self.sched.note_prefilled(c.rid, c.start + c.length)
             if c.final:
                 tok = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
                 self._next_np[c.slot] = tok
                 self.sched.on_token(c.slot, self._emit(req, tok))
-        if plan.decode_slots:
-            active = np.zeros((self.max_batch,), np.int32)
-            pos = np.zeros((self.max_batch,), np.int32)
-            for slot in plan.decode_slots:
-                r = self.sched.running[slot]
-                active[slot] = 1
-                pos[slot] = r.decode_pos  # cache position this step writes
-            bt = jnp.asarray(self.sched.tables, jnp.int32)
-            logits, self.pool_dev = self._decode_paged(
-                self.params, self.pool_dev, jnp.asarray(self._next_np),
-                jnp.asarray(pos), bt, jnp.asarray(active),
-                jnp.asarray(self._trash_np),
-            )
-            toks = np.asarray(
-                jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1), np.int32
-            )
-            for slot in plan.decode_slots:
-                req = self._rid2req[self.sched.running[slot].rid]
-                tok = int(toks[slot])
-                self._next_np[slot] = tok
-                self.sched.on_token(slot, self._emit(req, tok))
-        return n_active
+
+    def _prefill_chunk_device(self, toks, start, bt, vlen, trash):
+        """Run one prefill chunk on the device pool; SpeculativeEngine
+        overrides to keep its drafter pool in lockstep."""
+        logits, self.pool_dev = self._chunk_fn(
+            self.params, self.pool_dev, toks, start, bt, vlen, trash
+        )
+        return logits
+
+    def _run_decode(self, plan) -> None:
+        """One decode token per ready slot. SpeculativeEngine overrides
+        with draft-k-verify-in-one-chunk."""
+        active = np.zeros((self.max_batch,), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        for slot in plan.decode_slots:
+            r = self.sched.running[slot]
+            active[slot] = 1
+            pos[slot] = r.decode_pos  # cache position this step writes
+        bt = jnp.asarray(self.sched.tables, jnp.int32)
+        logits, self.pool_dev = self._decode_paged(
+            self.params, self.pool_dev, jnp.asarray(self._next_np),
+            jnp.asarray(pos), bt, jnp.asarray(active),
+            jnp.asarray(self._trash_np),
+        )
+        toks = np.asarray(
+            jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1), np.int32
+        )
+        for slot in plan.decode_slots:
+            req = self._rid2req[self.sched.running[slot].rid]
+            tok = int(toks[slot])
+            self._next_np[slot] = tok
+            self.sched.on_token(slot, self._emit(req, tok))
 
     def run(self, requests: List[Request], max_steps: int = 10_000) -> Dict[int, List[int]]:
         for r in requests:
@@ -432,8 +482,13 @@ class ServingEngine:
         if not mapping:
             return False
         self.sched.apply_defrag(mapping)
-        self.pool_dev = permute_pool(self.pool_dev, mapping)
+        self._permute_pools(mapping)
         return True
+
+    def _permute_pools(self, mapping) -> None:
+        """Apply a defrag mapping to the device pool(s); SpeculativeEngine
+        overrides to move its drafter pool with the same mapping."""
+        self.pool_dev = permute_pool(self.pool_dev, mapping)
 
     def health(self) -> Dict[str, object]:
         """Operational snapshot: residency, backlog, shed/evict counters,
@@ -472,19 +527,29 @@ class ServingEngine:
             from repro.serving.kv_cache import kv_page_bytes
 
             page_bytes = kv_page_bytes(self.cfg, self.page_size)
-            return {
+            stats = {
                 "kv_bytes_resident": kv_bytes_resident(self.cfg, self.page_pool),
+                "kv_bytes_live": kv_bytes_live(self.cfg, self.page_pool),
                 "kv_bytes_resident_per_shard": kv_bytes_resident_per_shard(
                     self.cfg, self.page_pool
                 ),
                 "kv_bytes_peak": self.peak_used_pages * page_bytes,
+                "kv_bytes_live_peak": self.peak_live_pages * page_bytes,
                 "page_utilization": self.page_pool.utilization(),
                 "peak_used_pages": self.peak_used_pages,
+                "peak_live_pages": self.peak_live_pages,
                 "num_pages": self.num_pages,
                 "peak_resident_requests": self.sched.peak_resident_requests,
                 "dp_shards": self.dp_shards,
                 "ep_size": self.ep_size,
             }
+            if self.page_pool.prefix is not None:
+                stats["prefix"] = dict(
+                    self.page_pool.prefix.stats(),
+                    hit_tokens=self.sched.prefix_hit_tokens,
+                    cow_clones=self.page_pool.cow_clones,
+                )
+            return stats
         return {
             "kv_bytes_resident": ring_kv_bytes(
                 self.cfg, self.max_batch, self.cache_len

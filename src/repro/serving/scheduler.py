@@ -34,6 +34,20 @@ call produces one engine step:
   the window of every future query are released immediately — the window
   mask already excludes them, so paged decode holds O(window) KV per
   request where the full-context mapping would hold O(position).
+* **prefix-cache admission credit**: when the pool has a
+  :class:`~repro.serving.kv_cache.PrefixCache` and the request carries its
+  token ids, admission matches the prompt against the per-shard radix trie
+  and *credits* the hit pages against the budget — a request whose prompt
+  is mostly cached system prompt admits with near-zero new pages. On
+  placement the hit pages are refcount-attached into the block table and
+  ``prefilled`` skips past them (a fully-covered prompt COW-clones its
+  last page so the final-token recompute chunk never writes a shared
+  page); the engine promotes freshly-prefilled full prompt pages back into
+  the trie via :meth:`ChunkedScheduler.note_prefilled`. Budgets count
+  refcount-0 cache pages as available (``PagePool.available_in``) since
+  ``alloc`` reclaims them on demand — retained cache never stalls
+  admission a cache-less pool would have granted. Incompatible with
+  ``window`` (shared pages must be immutable; a window releases them).
 * **graceful degradation** (opt-in): ``max_queue``/``shed_watermark``
   bound the backlog at :meth:`submit` — a request that would overflow the
   queue or outrun the pool's spare capacity is rejected with a typed
@@ -49,7 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -89,6 +103,8 @@ class SchedRequest:
     submit_step: int = 0  # scheduler step count at submit (deadline clock)
     deadline_steps: Optional[int] = None  # per-request deadline override
     status: str = "ok"  # "ok" | "deadline" (evicted past its deadline)
+    tokens: Optional[np.ndarray] = None  # prompt ids (prefix-cache key)
+    prefix_hit_tokens: int = 0  # prompt tokens served from cache (last admit)
 
     @property
     def in_prefill(self) -> bool:
@@ -117,6 +133,9 @@ class StepPlan:
     decode_slots: List[int]
     preempted: List[int]  # rids evicted while building this plan
     expired: List[int] = dataclasses.field(default_factory=list)  # deadline
+    # COW clones from prefix-cache admission: (src_phys, dst_phys) device
+    # page copies the engine must apply BEFORE running this step's chunks
+    cow_copies: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
 
 
 class ChunkedScheduler:
@@ -124,6 +143,11 @@ class ChunkedScheduler:
         assert pool.page_size == cfg.page_size
         assert pool.num_shards == cfg.dp_shards, (pool.num_shards, cfg.dp_shards)
         assert cfg.max_batch % cfg.dp_shards == 0, (cfg.max_batch, cfg.dp_shards)
+        if pool.prefix is not None and cfg.window is not None:
+            raise ValueError(
+                "prefix cache and sliding window are mutually exclusive: "
+                "shared pages must be immutable, a window releases them"
+            )
         self.cfg = cfg
         self.pool = pool
         self.slots_per_shard = cfg.max_batch // cfg.dp_shards
@@ -136,10 +160,12 @@ class ChunkedScheduler:
         self.step_count = 0  # plan() calls; the deadline clock
         self.shed_count = 0  # submits rejected by max_queue/shed_watermark
         self.deadline_evictions = 0
+        self.prefix_hit_tokens = 0  # prompt tokens served from cache (total)
 
     # -- submission ---------------------------------------------------------
     def submit(self, rid: int, prompt_len: int, max_new_tokens: int,
-               deadline_steps: Optional[int] = None) -> None:
+               deadline_steps: Optional[int] = None,
+               tokens: Optional[np.ndarray] = None) -> None:
         total = prompt_len + max_new_tokens
         need = self.pool.pages_for(total)
         if need > self.cfg.max_pages_per_seq:
@@ -172,7 +198,7 @@ class ChunkedScheduler:
                 for r in self.queue
             )
             free = sum(
-                self.pool.free_pages_in(sh)
+                self.pool.available_in(sh)
                 for sh in range(self.cfg.dp_shards)
             )
             if free - self.cfg.shed_watermark < live + backlog:
@@ -183,10 +209,12 @@ class ChunkedScheduler:
                     f"(shed_watermark={self.cfg.shed_watermark}); back off "
                     "and resubmit"
                 )
+        if tokens is not None:
+            assert len(tokens) == prompt_len, (len(tokens), prompt_len)
         req = SchedRequest(
             rid=rid, prompt_len=prompt_len, max_new_tokens=max_new_tokens,
             orig_prompt_len=prompt_len, submit_step=self.step_count,
-            deadline_steps=deadline_steps,
+            deadline_steps=deadline_steps, tokens=tokens,
         )
         self.requests[rid] = req
         self.queue.append(req)
@@ -208,8 +236,9 @@ class ChunkedScheduler:
     def plan(self) -> StepPlan:
         self.step_count += 1
         preempted: List[int] = []
+        cow_copies: List[Tuple[int, int]] = []
         expired = self._expire()
-        self._admit()
+        self._admit(cow_copies)
         self.peak_resident_requests = max(
             self.peak_resident_requests, len(self.running)
         )
@@ -246,7 +275,15 @@ class ChunkedScheduler:
         if preempted:
             gone = set(preempted)
             prefills = [c for c in prefills if c.rid not in gone]
-        return StepPlan(prefills, decode_slots, preempted, expired)
+            # a preempted hit-request's COW target page was freed with it
+            live_cows = []
+            for src, dst in cow_copies:
+                holder = next((r for r in self.running.values()
+                               if dst in self.pool.owned(r.rid)), None)
+                if holder is not None:
+                    live_cows.append((src, dst))
+            cow_copies = live_cows
+        return StepPlan(prefills, decode_slots, preempted, expired, cow_copies)
 
     def on_token(self, slot: int, done: bool) -> None:
         """Record one output token for ``slot`` (from a decode step or a
@@ -294,7 +331,7 @@ class ChunkedScheduler:
             out.append(req.rid)
         return out
 
-    def _admit(self) -> None:
+    def _admit(self, cow_copies: Optional[List[Tuple[int, int]]] = None) -> None:
         while self.queue:
             free_slots = [
                 s for s in range(self.cfg.max_batch) if s not in self.running
@@ -311,32 +348,120 @@ class ChunkedScheduler:
             # Budgets are per shard; the head request takes the free slot
             # whose shard has the most headroom (ties -> lowest slot, which
             # at dp_shards=1 is exactly the original FIFO slot choice).
-            best_slot, best_budget = None, None
+            # Prefix-cache hit pages count as credit: a cached prompt needs
+            # only its uncached tail from the budget, so hit requests admit
+            # with near-zero new pages.
+            best_slot, best_headroom, best_credit = None, None, 0
             for slot in free_slots:
-                budget = self._shard_budget(self.shard_of_slot(slot))
-                if best_budget is None or budget > best_budget:
-                    best_slot, best_budget = slot, budget
-            if best_budget < need:
+                shard = self.shard_of_slot(slot)
+                credit = len(self._prefix_match(req, shard))
+                headroom = self._shard_budget(shard) + credit
+                if best_headroom is None or headroom > best_headroom:
+                    best_slot, best_headroom, best_credit = slot, headroom, credit
+            if best_headroom < need:
                 return  # head-of-line blocking preserves FIFO order
             self.queue.popleft()
             req.slot = best_slot
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
             self.running[req.slot] = req
+            if best_credit:
+                self._attach_prefix(req, cow_copies if cow_copies is not None
+                                    else [])
+
+    def _prefix_match(self, req: SchedRequest, shard: int) -> List[int]:
+        """Cached pages covering ``req``'s prompt head on ``shard`` (empty
+        without a prefix cache or prompt tokens)."""
+        if self.pool.prefix is None or req.tokens is None:
+            return []
+        return self.pool.prefix.match(req.tokens, shard)
+
+    def _attach_prefix(self, req: SchedRequest,
+                       cow_copies: List[Tuple[int, int]]) -> None:
+        """Refcount-attach the cached prefix pages into ``req``'s block
+        table and skip ``prefilled`` past them. A fully-covered prompt
+        COW-clones its last page: the final-token recompute chunk (which
+        must run — its logits emit the first output token) scatters into
+        the private clone, never into a shared page."""
+        shard = self.shard_of_slot(req.slot)
+        pages = self.pool.prefix.acquire(req.rid, req.tokens, shard)
+        if not pages:
+            return
+        ps = self.cfg.page_size
+        if len(pages) * ps >= req.prompt_len:
+            new = self.pool.cow(req.rid, pages[-1])
+            if new is None:  # shard dry: shrink the hit by one page instead
+                self.pool.detach(req.rid, [pages[-1]])
+                pages = pages[:-1]
+            else:
+                cow_copies.append((pages[-1], new))
+                pages = pages[:-1] + [new]
+        if not pages:
+            return
+        for j, p in enumerate(pages):
+            self.tables[req.slot, j] = p
+        req.logical_pages = len(pages)
+        req.prefilled = min(len(pages) * ps, req.prompt_len - 1)
+        req.prefix_hit_tokens = req.prefilled
+        self.prefix_hit_tokens += req.prefilled
+
+    def note_prefilled(self, rid: int, covered: int) -> int:
+        """Engine callback after a prefill chunk actually ran: promote the
+        request's freshly-written private pages covering full *original
+        prompt* token runs ``[0, covered)`` into the prefix cache. Returns
+        pages newly promoted. No-op without a cache / prompt tokens, or if
+        the request was preempted before the chunk's effects were
+        recorded."""
+        req = self.requests[rid]
+        if (self.pool.prefix is None or req.tokens is None or req.slot < 0
+                or self.running.get(req.slot) is not req):
+            return 0
+        full = min(covered, len(req.tokens)) // self.cfg.page_size
+        if full <= 0:
+            return 0
+        return self.pool.prefix.insert(
+            rid, req.tokens, full, self.tables[req.slot]
+        )
+
+    def ensure_lookahead(self, slot: int, extra: int) -> int:
+        """Map pages for up to ``extra`` tokens beyond the next decode
+        write WITHOUT preemption — speculative lookahead must not evict
+        admitted work. Returns the lookahead actually backed by pages
+        (falls back toward 0 when the shard is tight)."""
+        req = self.running[slot]
+        shard = self.shard_of_slot(slot)
+        while extra > 0:
+            need = self.pool.pages_for(req.decode_pos + 1 + extra)
+            n_new = need - req.logical_pages
+            if n_new <= 0:
+                break
+            if n_new <= self.pool.available_in(shard):
+                pages = self.pool.alloc(req.rid, n_new, shard=shard)
+                if pages is not None:
+                    for i, p in enumerate(pages):
+                        self.tables[slot, req.logical_pages + i] = p
+                    req.logical_pages = need
+                    break
+            extra -= 1
+        return max(extra, 0)
 
     def _shard_budget(self, shard: int) -> int:
-        """Free pages of ``shard``'s sub-pool minus its admission reserve
-        (watermark + pages committed to still-prefilling residents)."""
+        """Allocatable pages of ``shard``'s sub-pool (free + reclaimable
+        refcount-0 cache pages) minus its admission reserve (watermark +
+        pages committed to still-prefilling residents). A resident's
+        commitment counts every page backing it — private and
+        shared-referenced (``PagePool.held``) — so a prefix-hit request
+        reserves only its uncached tail."""
         residents = [
             r for r in self.running.values()
             if self.shard_of_slot(r.slot) == shard
         ]
         committed = sum(
-            max(0, self._live_bound(r.prompt_len) - len(self.pool.owned(r.rid)))
+            max(0, self._live_bound(r.prompt_len) - self.pool.held(r.rid))
             for r in residents if r.in_prefill
         )
         reserve = self.cfg.watermark + committed if residents else 0
-        return self.pool.free_pages_in(shard) - reserve
+        return self.pool.available_in(shard) - reserve
 
     def _live_bound(self, tokens: int) -> int:
         """Peak live pages a span of ``tokens`` can pin. With a sliding
@@ -361,7 +486,7 @@ class ChunkedScheduler:
             n_new = need - req.logical_pages
             pages = self.pool.alloc(req.rid, n_new, shard=shard)
             if pages is None:
-                if self.pool.free_pages_in(shard) >= n_new:
+                if self.pool.available_in(shard) >= n_new:
                     # the sub-pool could have satisfied this: a transient
                     # alloc failure (fault injection / flaky allocator),
                     # not genuine pressure — stall this step and retry
@@ -373,9 +498,14 @@ class ChunkedScheduler:
                         r.admit_seq for r in self.running.values()
                         if self.shard_of_slot(r.slot) == shard
                     ]
+                    # "too small" only when everything non-reclaimable in
+                    # the shard already backs this request (held counts
+                    # private + shared-referenced pages; refcount-0 cache
+                    # pages would have been reclaimed by alloc)
                     if req.admit_seq == min(sh_seqs) and (
                         self.pool.used_pages_in(shard)
-                        == len(self.pool.owned(req.rid))
+                        - self.pool.evictable_in(shard)
+                        == self.pool.held(req.rid)
                     ):
                         raise RuntimeError(
                             f"page pool shard ({self.pool.pages_per_shard} "
@@ -414,6 +544,7 @@ class ChunkedScheduler:
         victim.slot = -1
         victim.admit_seq = -1
         victim.preemptions += 1
+        victim.prefix_hit_tokens = 0  # re-admission re-attaches from the trie
         self.queue.appendleft(victim)
 
     def _release_dead(self, req: SchedRequest, stored: int) -> None:

@@ -1,0 +1,231 @@
+"""Speculative decoding with the dense upcycling parent as drafter.
+
+The paper's recipe makes the MoE a function-preserving derivative of its
+dense source (§3.1): same tokenizer, same d_model/heads/layers, and — at
+Mixtral-type router init — the *same output distribution*. That hands the
+serving stack a free speculative pair: the dense parent drafts ``k``
+tokens autoregressively (cheap single-token decodes, no expert dispatch),
+and the MoE verifies all of them in ONE chunked-prefill-shaped step
+(``paged_forward(..., return_all_logits=True)`` at static length
+``k + 1``). Greedy acceptance: keep the longest prefix where the draft
+matches the verifier's argmax, then emit the verifier's own next token —
+so every verify step emits between 1 and ``k + 1`` tokens and the output
+is *token-for-token identical* to non-speculative greedy decode (pinned by
+``tests/test_serving_paged.py``).
+
+Mechanics on the paged-KV subsystem:
+
+* ONE host :class:`~repro.serving.kv_cache.PagePool` + scheduler + block
+  tables drive TWO device pools with identical page geometry (same
+  num_pages / page_size / per-shard trash pages): the verifier's MoE KV
+  and the drafter's dense KV. Prefill chunks, COW clones, and defrag
+  permutations are applied to both in lockstep, so a block-table entry
+  means the same thing in either pool. Prefix-cache hits therefore skip
+  prefill compute for drafter and verifier at once — the two features
+  compound.
+* Per row, the draft depth is ``min(k, remaining - 1, lookahead)`` where
+  ``lookahead`` is how many pages past the next write the scheduler could
+  map *without preemption* (speculative appetite must not evict admitted
+  work — it degrades to plain decode when the pool is tight).
+* The drafter runs ``d + 1`` decode steps (inputs ``t0, d1..dd``), so its
+  KV covers the same positions the verifier writes; rejected positions in
+  both pools are masked by ``seq_lens`` until overwritten by later steps.
+
+Acceptance-rate semantics: ``accepted_tokens / drafted_tokens`` counts
+only draft positions (the always-emitted correction/bonus token is free).
+A function-preserving upcycled pair accepts ~100%; the rate degrades
+gracefully as the MoE trains away from its parent, and correctness never
+depends on it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.upcycle import upcycle_params, upcycle_provenance
+from repro.models.model import decode_step_paged, paged_forward
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import copy_pages, init_paged_pool, permute_pool
+
+
+class SpeculativeEngine(ServingEngine):
+    """Paged :class:`ServingEngine` whose decode phase drafts ``draft_k``
+    tokens on a dense parent model and verifies them in one MoE step."""
+
+    def __init__(self, cfg: ModelConfig, params, draft_cfg: ModelConfig,
+                 draft_params, draft_k: int = 4, **kw):
+        assert draft_k >= 1, draft_k
+        if kw.setdefault("cache_mode", "paged") != "paged":
+            raise ValueError("SpeculativeEngine requires cache_mode='paged'")
+        if kw.get("mesh") is not None:
+            raise ValueError("SpeculativeEngine does not support mesh mode yet")
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                "drafter and verifier must share the tokenizer: "
+                f"{draft_cfg.vocab_size} != {cfg.vocab_size}"
+            )
+        super().__init__(cfg, params, **kw)
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.draft_k = draft_k
+        # drafter device pool mirrors the verifier's page geometry so the
+        # one set of block tables addresses both
+        self.draft_pool_dev = init_paged_pool(
+            draft_cfg, self.num_pages, self.page_size, num_shards=self.dp_shards
+        )
+        self._draft_chunk = jax.jit(
+            lambda p, pool, t, s, bt, vl, tr: paged_forward(
+                draft_cfg, None, p, pool, t, s, bt, vl,
+                use_kernel=self.use_kernel, trash_page=tr,
+            ),
+            donate_argnums=(1,),
+        )
+        self._draft_decode = jax.jit(
+            lambda p, pool, t, pos, bt, a, tr: decode_step_paged(
+                draft_cfg, None, p, pool, t, pos, bt, a,
+                use_kernel=self.use_kernel, trash_page=tr,
+            ),
+            donate_argnums=(1,),
+        )
+        # verify = one chunk at static S = k+1 returning logits at EVERY
+        # position; per-row real lengths via valid_len (d + 1)
+        self._verify_fn = jax.jit(
+            lambda p, pool, t, s, bt, vl, tr: paged_forward(
+                cfg, None, p, pool, t, s, bt, vl,
+                use_kernel=self.use_kernel, trash_page=tr,
+                return_all_logits=True,
+            ),
+            donate_argnums=(1,),
+        )
+        self.spec_steps = 0  # verify calls (= decode-phase engine steps)
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.provenance = None  # set by from_upcycle
+
+    @classmethod
+    def from_upcycle(cls, dense_cfg: ModelConfig, moe_cfg: ModelConfig,
+                     dense_params, rng: Optional[jax.Array] = None,
+                     draft_k: int = 4, **kw) -> "SpeculativeEngine":
+        """Build the drafter/verifier pair the way the paper builds the
+        models: upcycle the dense parent's params into the MoE (function-
+        preserving at Mixtral router init), keep the dense params as the
+        drafter, and record the :func:`upcycle_provenance` link."""
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        params = upcycle_params(dense_cfg, moe_cfg, dense_params, rng)
+        eng = cls(moe_cfg, params, dense_cfg, dense_params,
+                  draft_k=draft_k, **kw)
+        eng.provenance = upcycle_provenance(dense_cfg, moe_cfg)
+        return eng
+
+    @property
+    def acceptance_rate(self) -> float:
+        if self.drafted_tokens == 0:
+            return 0.0
+        return self.accepted_tokens / self.drafted_tokens
+
+    # -- lockstep hooks ------------------------------------------------------
+    def _apply_cow(self, copies) -> None:
+        super()._apply_cow(copies)
+        self.draft_pool_dev = copy_pages(self.draft_pool_dev, copies)
+
+    def _permute_pools(self, mapping) -> None:
+        super()._permute_pools(mapping)
+        self.draft_pool_dev = permute_pool(self.draft_pool_dev, mapping)
+
+    def _prefill_chunk_device(self, toks, start, bt, vlen, trash):
+        _, self.draft_pool_dev = self._draft_chunk(
+            self.draft_params, self.draft_pool_dev, toks, start, bt, vlen,
+            trash,
+        )
+        return super()._prefill_chunk_device(toks, start, bt, vlen, trash)
+
+    # -- draft / verify decode ----------------------------------------------
+    def _run_decode(self, plan) -> None:
+        slots = plan.decode_slots
+        B, k, V = self.max_batch, self.draft_k, self.cfg.vocab_size
+        # per-row draft depth: never draft past the request's budget (the
+        # correction token always emits), never force page eviction
+        d = np.zeros((B,), np.int32)
+        for slot in slots:
+            req = self._rid2req[self.sched.running[slot].rid]
+            want = max(min(k, req.max_new_tokens - len(req.output) - 1), 0)
+            d[slot] = self.sched.ensure_lookahead(slot, want)
+        base_pos = np.zeros((B,), np.int32)
+        for slot in slots:
+            base_pos[slot] = self.sched.running[slot].decode_pos
+        bt = jnp.asarray(self.sched.tables, jnp.int32)
+        trash = jnp.asarray(self._trash_np)
+
+        # ---- draft phase: d+1 drafter decodes per row (feed t0, d1..dd) —
+        # the last step writes the drafter's KV at base+d so a fully-
+        # accepted step leaves no KV hole
+        drafts = np.zeros((B, k), np.int32)
+        cur = self._next_np.copy()
+        pos = base_pos.copy()
+        for i in range(k + 1):
+            act = np.zeros((B,), np.int32)
+            for slot in slots:
+                if i <= d[slot]:
+                    act[slot] = 1
+            if not act.any():
+                break
+            logits, self.draft_pool_dev = self._draft_decode(
+                self.draft_params, self.draft_pool_dev, jnp.asarray(cur),
+                jnp.asarray(pos), bt, jnp.asarray(act), trash,
+            )
+            toks = np.asarray(jnp.argmax(logits[:, :V], axis=-1), np.int32)
+            for slot in slots:
+                if i <= d[slot]:
+                    pos[slot] += 1
+                    if i < d[slot]:
+                        drafts[slot, i] = toks[slot]
+                        cur[slot] = toks[slot]
+
+        # ---- verify phase: one MoE chunk scores t0 + all drafts ----------
+        vt = np.zeros((B, k + 1), np.int32)
+        vl = np.zeros((B,), np.int32)
+        for slot in slots:
+            vt[slot, 0] = self._next_np[slot]
+            vt[slot, 1:1 + d[slot]] = drafts[slot, :d[slot]]
+            vl[slot] = d[slot] + 1
+        logits_all, self.pool_dev = self._verify_fn(
+            self.params, self.pool_dev, jnp.asarray(vt),
+            jnp.asarray(base_pos), bt, jnp.asarray(vl), trash,
+        )
+        targets = np.asarray(
+            jnp.argmax(logits_all[:, :, :V], axis=-1), np.int32
+        )  # (B, k+1): target token after each input position
+
+        # ---- accept longest agreeing prefix + the verifier's correction --
+        self.spec_steps += 1
+        for slot in slots:
+            req = self._rid2req[self.sched.running[slot].rid]
+            m = 0
+            while m < d[slot] and drafts[slot, m] == targets[slot, m]:
+                m += 1
+            self.drafted_tokens += int(d[slot])
+            self.accepted_tokens += m
+            emitted = list(drafts[slot, :m]) + [targets[slot, m]]
+            for tok in emitted:
+                tok = int(tok)
+                self._next_np[slot] = tok
+                done = self._emit(req, tok)
+                self.sched.on_token(slot, done)
+                if done:
+                    break  # later verified tokens are discarded (eos/budget)
+
+    def kv_stats(self):
+        stats = super().kv_stats()
+        stats["speculation"] = {
+            "draft_k": self.draft_k,
+            "spec_steps": self.spec_steps,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "acceptance_rate": round(self.acceptance_rate, 4),
+        }
+        return stats

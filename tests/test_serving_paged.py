@@ -169,6 +169,168 @@ def test_ring_prefill_compiles_once_per_bucket():
     assert engine.prefill_traces == 2, engine.prefill_traces
 
 
+# -- prefix-cache KV reuse ---------------------------------------------------
+
+
+def _shared_prefix_requests(cfg, seed, n=6, stem_len=12, tail=(1, 10),
+                            new=(3, 6)):
+    """n requests sharing one stem: rid 4 is the bare stem and admits in
+    the second wave once the stem is cached (full-coverage hit -> COW);
+    the rest append random tails (partial hits)."""
+    rng = np.random.default_rng(seed)
+    stem = rng.integers(0, cfg.vocab_size, stem_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        t = rng.integers(0, cfg.vocab_size, int(rng.integers(*tail))).astype(np.int32)
+        prompt = stem.copy() if i == 4 else np.concatenate([stem, t])
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=int(rng.integers(*new))))
+    return reqs
+
+
+def test_prefix_cache_parity_and_hit_accounting():
+    """Shared-prefix traffic with the radix cache on decodes token-for-token
+    what the cache-less paged engine decodes, while the stats show real
+    hits, credited admission, and at least one COW clone."""
+    cfg = tiny_dense().replace(dtype="float32")
+    params = init_model(cfg, fp32=True)
+    kw = dict(max_batch=3, max_seq=64, cache_mode="paged", page_size=4,
+              prefill_chunk=8)
+    plain = ServingEngine(cfg, params, **kw)
+    out_plain = plain.run(_shared_prefix_requests(cfg, 5))
+    cached = ServingEngine(cfg, params, prefix_cache=True, **kw)
+    out_cached = cached.run(_shared_prefix_requests(cfg, 5))
+    assert out_plain == out_cached
+    st = cached.kv_stats()["prefix"]
+    # 6 requests x 12-token stem through 3 slots: the later waves must hit
+    assert st["hits"] > 0 and st["hit_pages"] > 0
+    assert st["hit_tokens"] > 0 and st["inserted_pages"] >= 3
+    assert st["cow_clones"] >= 1, "the bare-stem request never COW-cloned"
+    # drained: every cached page at refcount zero, fully reclaimable
+    pool = cached.page_pool
+    pool.check_invariants()
+    assert not pool._refs and all(r == 0 for r in pool._shared.values())
+    pool.drop_prefix_cache()
+    assert pool.free_pages == pool.num_pages
+
+
+def test_cow_never_mutates_shared_pages_on_device():
+    """Device-content check: a full-coverage hit writes its recompute chunk
+    and decode tokens into the COW clone and fresh pages — the cached KV
+    pages are bit-identical before and after the hit request's lifetime."""
+    import jax
+
+    cfg = tiny_dense().replace(dtype="float32")
+    params = init_model(cfg, fp32=True)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                        cache_mode="paged", page_size=4, prefill_chunk=8,
+                        prefix_cache=True)
+    stem = np.arange(12, dtype=np.int32) % cfg.vocab_size
+    out0 = eng.run([Request(rid=0, prompt=stem.copy(), max_new_tokens=3)])
+    pool = eng.page_pool
+    shared = sorted(pool._shared)
+    assert len(shared) == 3, "12-token prompt should cache 3 full pages"
+    before = [np.asarray(leaf[:, shared])
+              for leaf in jax.tree.leaves(eng.pool_dev)]
+    out1 = eng.run([Request(rid=1, prompt=stem.copy(), max_new_tokens=5)])
+    assert pool.cow_clones >= 1
+    assert out1[1][:3] == out0[0], "same prompt, same greedy stream"
+    after = [np.asarray(leaf[:, shared])
+             for leaf in jax.tree.leaves(eng.pool_dev)]
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a)
+
+
+# -- speculative decoding ----------------------------------------------------
+
+
+def test_speculative_parity_same_drafter():
+    """Drafter == verifier (same params): token-for-token parity with the
+    plain paged engine, every draft accepted, and verify steps strictly
+    fewer than one-token-per-step decode would need."""
+    from repro.serving.speculative import SpeculativeEngine
+
+    cfg = tiny_dense().replace(dtype="float32")
+    params = init_model(cfg, fp32=True)
+    kw = dict(max_batch=2, max_seq=64, page_size=4, prefill_chunk=8)
+    plain = ServingEngine(cfg, params, cache_mode="paged", **kw)
+    out_plain = plain.run(_requests(cfg, 21, n=4, lmax=20, new=(4, 9)))
+    spec = SpeculativeEngine(cfg, params, cfg, params, draft_k=3, **kw)
+    out_spec = spec.run(_requests(cfg, 21, n=4, lmax=20, new=(4, 9)))
+    assert out_plain == out_spec
+    assert spec.drafted_tokens > 0 and spec.acceptance_rate == 1.0
+    total_new = sum(len(o) for o in out_spec.values())
+    assert spec.spec_steps < total_new, "speculation never batched tokens"
+    spec.page_pool.check_invariants()
+    assert spec.page_pool.free_pages == spec.page_pool.num_pages
+
+
+def test_speculative_parity_with_bad_drafter():
+    """A drafter that disagrees with the verifier (independently initialized
+    params) costs acceptance, never correctness: greedy output is still
+    identical to non-speculative decode."""
+    from repro.serving.speculative import SpeculativeEngine
+
+    cfg = tiny_dense().replace(dtype="float32")
+    params = init_model(cfg, fp32=True)
+    bad = init_model(cfg, seed=99, fp32=True)
+    kw = dict(max_batch=2, max_seq=64, page_size=4, prefill_chunk=8)
+    plain = ServingEngine(cfg, params, cache_mode="paged", **kw)
+    out_plain = plain.run(_requests(cfg, 23, n=4, lmax=20, new=(4, 9)))
+    spec = SpeculativeEngine(cfg, params, cfg, bad, draft_k=3, **kw)
+    out_spec = spec.run(_requests(cfg, 23, n=4, lmax=20, new=(4, 9)))
+    assert out_plain == out_spec
+    assert spec.acceptance_rate < 1.0, (
+        "independent random params should disagree somewhere"
+    )
+
+
+def test_speculative_from_upcycle_pair():
+    """The paper's pairing: upcycle the dense parent into the MoE, draft on
+    dense, verify on MoE. Function-preserving init (Mixtral router) makes
+    acceptance ~1; output matches a plain engine serving the same MoE."""
+    from repro.config import MoEConfig
+    from repro.core.upcycle import upcycle_config, upcycle_params
+    from repro.serving.speculative import SpeculativeEngine
+
+    dense = tiny_dense().replace(dtype="float32")
+    dp = init_model(dense, fp32=True)
+    moe_cfg = _dropless(upcycle_config(
+        dense, MoEConfig(num_experts=4, top_k=2, capacity_factor=None)
+    ))
+    kw = dict(max_batch=2, max_seq=64, page_size=4, prefill_chunk=8)
+    spec = SpeculativeEngine.from_upcycle(dense, moe_cfg, dp, draft_k=3, **kw)
+    assert spec.provenance is not None
+    out_spec = spec.run(_requests(moe_cfg, 29, n=4, lmax=20, new=(4, 9)))
+    import jax
+
+    mp = upcycle_params(dense, moe_cfg, dp, jax.random.PRNGKey(0))
+    plain = ServingEngine(moe_cfg, mp, cache_mode="paged", **kw)
+    out_plain = plain.run(_requests(moe_cfg, 29, n=4, lmax=20, new=(4, 9)))
+    assert out_spec == out_plain
+    assert spec.acceptance_rate > 0.9, spec.kv_stats()["speculation"]
+
+
+def test_speculative_with_prefix_cache():
+    """The two features compound: prefix hits skip prefill for drafter AND
+    verifier (lockstep pools), speculation still decodes the exact greedy
+    stream."""
+    from repro.serving.speculative import SpeculativeEngine
+
+    cfg = tiny_dense().replace(dtype="float32")
+    params = init_model(cfg, fp32=True)
+    kw = dict(max_batch=2, max_seq=64, page_size=4, prefill_chunk=8)
+    plain = ServingEngine(cfg, params, cache_mode="paged", **kw)
+    out_plain = plain.run(_shared_prefix_requests(cfg, 31, n=5))
+    spec = SpeculativeEngine(cfg, params, cfg, params, draft_k=3,
+                             prefix_cache=True, **kw)
+    out_spec = spec.run(_shared_prefix_requests(cfg, 31, n=5))
+    assert out_plain == out_spec
+    stats = spec.kv_stats()
+    assert stats["prefix"]["hits"] > 0
+    assert stats["speculation"]["acceptance_rate"] == 1.0
+
+
 def test_bucketed_prefill_matches_exact():
     """Right-padded bucketed prefill (valid_len path) produces the same
     tokens as an engine whose bucket is the exact prompt length."""

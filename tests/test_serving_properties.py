@@ -21,22 +21,27 @@ except ImportError:
 
 
 def _check_tables(sched: ChunkedScheduler) -> None:
-    """Every block-table entry maps to a page the slot's request owns, and
-    no physical page appears in two tables (no double-assign). Under
-    ``dp_shards > 1`` each resident request is pinned to its slot's shard."""
+    """Every block-table entry maps to a page the slot's request holds
+    (private, or shared-referenced via the prefix cache), a *private* page
+    never appears in two tables (no double-assign; shared pages appear in
+    as many tables as their refcount), and under ``dp_shards > 1`` each
+    resident request is pinned to its slot's shard."""
     seen = {}
+    shared = set(sched.pool._shared)
     for slot, req in sched.running.items():
         pinned = sched.pool.shard_of(req.rid)
         assert pinned in (None, sched.shard_of_slot(slot)), (
             f"slot {slot} (shard {sched.shard_of_slot(slot)}) holds request "
             f"{req.rid} pinned to shard {pinned}"
         )
-        owned = set(sched.pool.owned(req.rid))
+        held = set(sched.pool.owned(req.rid)) | set(sched.pool.refs(req.rid))
         row = sched.tables[slot]
         live = row[row >= 0]
         assert len(set(live)) == len(live), f"slot {slot} repeats a page"
         for p in live:
-            assert int(p) in owned, f"slot {slot} maps unowned page {p}"
+            assert int(p) in held, f"slot {slot} maps unheld page {p}"
+            if int(p) in shared:
+                continue  # sharing across slots is exactly the point
             assert p not in seen, f"page {p} in slots {seen[p]} and {slot}"
             seen[p] = slot
     # idle slots are fully cleared
@@ -47,12 +52,17 @@ def _check_tables(sched: ChunkedScheduler) -> None:
 
 def simulate(seed, num_pages=12, ps=4, max_batch=3, chunk=8, window=None,
              n_req=8, watermark=1, eos_p=0.05, defrag_every=0, max_steps=3000,
-             dp_shards=1):
+             dp_shards=1, prefix=False):
     """Drive the scheduler with a random stream; returns summary stats.
     Token values are irrelevant to the policy layer, so 'decode' here is
-    just the bookkeeping calls the engine would make."""
+    just the bookkeeping calls the engine would make. With ``prefix=True``
+    requests carry token arrays drawn from a tiny set of shared prefixes,
+    the prefix cache is enabled, and prefill completion is reported via
+    ``note_prefilled`` (as the engine would)."""
     rng = np.random.default_rng(seed)
     pool = PagePool(num_pages, ps, num_shards=dp_shards)
+    if prefix:
+        pool.enable_prefix_cache()
     maxP = 16
     sched = ChunkedScheduler(
         SchedulerConfig(max_batch, ps, chunk, max_pages_per_seq=maxP,
@@ -60,25 +70,40 @@ def simulate(seed, num_pages=12, ps=4, max_batch=3, chunk=8, window=None,
                         dp_shards=dp_shards),
         pool,
     )
+    # a few shared prefixes so concurrent requests actually collide
+    stems = [rng.integers(0, 50, size=int(rng.integers(1, 3 * ps)))
+             for _ in range(3)]
     pending = []
     for rid in range(n_req):
         p, m = int(rng.integers(1, 20)), int(rng.integers(1, 10))
         if (pool.pages_for(p + m) <= maxP
                 and sched._live_bound(p + m) <= pool.pages_per_shard):
-            pending.append((rid, p, m))
+            toks = None
+            if prefix:
+                stem = stems[int(rng.integers(0, len(stems)))][:p]
+                tail = rng.integers(0, 50, size=p - len(stem))
+                toks = np.concatenate([stem, tail]).astype(np.int32)
+            pending.append((rid, p, m, toks))
     submitted, finished = set(), set()
     steps = preemptions = 0
     while (pending or sched.has_work) and steps < max_steps:
         steps += 1
         while pending and rng.random() < 0.5:
-            rid, p, m = pending.pop(0)
-            sched.submit(rid, p, m)
+            rid, p, m, toks = pending.pop(0)
+            sched.submit(rid, p, m, tokens=toks)
             submitted.add(rid)
         plan = sched.plan()
         preemptions += len(plan.preempted)
+        # COW clones target a page the destination request privately owns
+        for src, dst in plan.cow_copies:
+            assert src in pool._shared
+            assert any(dst in pool.owned(r.rid)
+                       for r in sched.running.values())
         pool.check_invariants()
         _check_tables(sched)
         for c in plan.prefills:
+            if prefix:
+                sched.note_prefilled(c.rid, c.start + c.length)
             if c.final:
                 req = sched.running[c.slot]
                 done = req.generated + 1 >= req.max_new_tokens or rng.random() < eos_p
@@ -101,11 +126,20 @@ def simulate(seed, num_pages=12, ps=4, max_batch=3, chunk=8, window=None,
     assert not sched.has_work and not pending, f"live work after {steps} steps"
     assert finished == submitted
     # no leak: freed == allocated at drain — in every shard's sub-pool
-    assert pool.free_pages == num_pages
     assert not pool._owned
+    if prefix:
+        # drained: nothing referenced, every cached page at refcount zero
+        assert not pool._refs
+        assert all(r == 0 for r in pool._shared.values())
+        assert pool.free_pages == num_pages - pool.shared_pages
+        pool.drop_prefix_cache()
+        assert not pool._shared and not pool._evictable
+        pool.check_invariants()
+    assert pool.free_pages == num_pages
     for s in range(pool.num_shards):
         assert pool.free_pages_in(s) == pool.pages_per_shard, f"shard {s} leaked"
-    return {"steps": steps, "preemptions": preemptions}
+    return {"steps": steps, "preemptions": preemptions,
+            "prefix_hits": pool.prefix.hits if prefix else 0}
 
 
 @pytest.mark.parametrize("seed", range(12))
@@ -242,6 +276,105 @@ def test_pagepool_alloc_free_defrag_unit():
         assert all(new < 2 for new in mapping.values())
 
 
+def test_zero_alloc_is_pure_noop():
+    """alloc(rid, 0) returns [] without touching ANY pool state — no owner
+    record, no shard pin, no free-list movement; negative n is a caller bug."""
+    pool = PagePool(8, 4, num_shards=2)
+    before = (pool.free_pages, dict(pool._shard_of), dict(pool._owned))
+    assert pool.alloc(7, 0) == []
+    assert pool.alloc(7, 0, shard=1) == []
+    assert (pool.free_pages, dict(pool._shard_of), dict(pool._owned)) == before
+    assert pool.shard_of(7) is None  # no pin from the empty alloc
+    pool.check_invariants()
+    with pytest.raises(AssertionError):
+        pool.alloc(7, -1)
+
+
+def test_release_to_zero_keeps_shard_pin():
+    """A live request that transiently drops to zero pages stays pinned to
+    its shard: the next alloc must come from the same sub-pool. Only
+    free_request drops the pin."""
+    pool = PagePool(8, 2, num_shards=2)
+    pages = pool.alloc(3, 2, shard=1)
+    pool.release(3, pages)
+    assert pool.owned(3) == [] and pool.free_pages == 8
+    assert pool.shard_of(3) == 1, "pin dropped on transient zero pages"
+    with pytest.raises(AssertionError):
+        pool.alloc(3, 1, shard=0)  # wrong shard: the pin still guards
+    again = pool.alloc(3, 1, shard=pool.shard_of(3))
+    assert again and all(pool.shard_of_page(p) == 1 for p in again)
+    pool.check_invariants()
+    pool.free_request(3)
+    assert pool.shard_of(3) is None
+    pool.check_invariants()
+
+
+def test_shared_page_refcounts():
+    """Refcounted sharing: a page with refcount > 0 is never freed or
+    reclaimed, COW detaches the reader instead of mutating the shared page,
+    and a full drain leaves every cached page at refcount zero."""
+    pool = PagePool(6, 2)
+    cache = pool.enable_prefix_cache()
+    toks = np.arange(4, dtype=np.int32)  # two full pages
+    a = pool.alloc(0, 2)
+    cache.insert(0, toks, 2, np.array(a, np.int32))  # promote both pages
+    assert pool.owned(0) == [] and pool.refs(0) == a
+    assert pool.refcount(a[0]) == pool.refcount(a[1]) == 1
+    hit = cache.acquire(1, toks, 0)  # rid 1 shares the whole prefix
+    assert hit == a and pool.refcount(a[0]) == 2
+    pool.check_invariants()
+    # referenced pages are NOT reclaimable: a too-big alloc must fail
+    # rather than steal a shared page (4 free + 0 evictable < 5)
+    assert pool.alloc(2, 5) is None
+    assert pool.refcount(a[0]) == 2
+    # COW: rid 1 diverges at the last page — fresh private page, shared
+    # page keeps serving rid 0
+    fresh = pool.cow(1, a[1])
+    assert fresh is not None and fresh != a[1]
+    assert pool.refcount(a[1]) == 1 and fresh in pool.owned(1)
+    assert pool.cow_clones == 1
+    pool.check_invariants()
+    # drain: refcounts fall to zero, pages become evictable (cached), and
+    # only then can allocation pressure reclaim them (leaf-first)
+    pool.free_request(0)
+    pool.free_request(1)
+    assert pool.refcount(a[0]) == 0 and not pool._refs
+    assert pool.evictable_pages == 2
+    pool.check_invariants()
+    big = pool.alloc(3, 6)  # needs every page -> evicts both cached ones
+    assert big is not None and len(big) == 6
+    assert pool.shared_pages == 0
+    pool.check_invariants()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_prefix_streams_keep_invariants(seed):
+    """Shared-prefix traffic through the radix cache: refcount/table
+    invariants hold at every step and the drain leaves only refcount-zero
+    cached pages behind."""
+    simulate(seed, prefix=True, n_req=10)
+
+
+def test_prefix_streams_actually_hit():
+    hits = sum(simulate(s, prefix=True, n_req=10, ps=2)["prefix_hits"]
+               for s in range(8))
+    assert hits > 0, "prefix traffic never hit the cache across 8 seeds"
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_tight_prefix_pool_reclaims_and_terminates(seed):
+    """Under page pressure the allocator reclaims cached (refcount-zero)
+    pages leaf-first instead of stalling admission."""
+    simulate(seed, num_pages=7, max_batch=3, n_req=10, prefix=True)
+
+
+def test_prefix_defrag_and_sharded_streams():
+    for seed in range(4):
+        simulate(seed, prefix=True, defrag_every=3)
+        simulate(seed, num_pages=16, max_batch=4, dp_shards=2, prefix=True,
+                 n_req=10)
+
+
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=25, deadline=None)
@@ -252,7 +385,11 @@ if HAVE_HYPOTHESIS:
         max_batch=st.integers(1, 4),
         chunk=st.sampled_from([1, 4, 8, 16]),
         window=st.one_of(st.none(), st.integers(2, 12)),
+        prefix=st.booleans(),
     )
-    def test_hypothesis_streams(seed, num_pages, ps, max_batch, chunk, window):
+    def test_hypothesis_streams(seed, num_pages, ps, max_batch, chunk, window,
+                                prefix):
+        if prefix:
+            window = None  # prefix cache requires full attention
         simulate(seed, num_pages=num_pages, ps=ps, max_batch=max_batch,
-                 chunk=chunk, window=window, n_req=6)
+                 chunk=chunk, window=window, n_req=6, prefix=prefix)
