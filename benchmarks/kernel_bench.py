@@ -7,7 +7,9 @@ kernel wall-times are NOT hardware-representative; we therefore report
 (a) XLA-path fwd and fwd+bwd wall time as the throughput baseline,
 (b) kernel-vs-ref max error (fwd and grad), and (c) derived activation /
 HBM-traffic accounting — the quantities the kernels exist to optimize on
-TPU. The backward rows carry the recompute accounting: the custom_vjp saves
+TPU. The quant rows pair bf16 against int8 on both fused-dequant paths
+(grouped GEMM and paged attention) and gate the ``bytes_per_row``
+reduction at >= 1.8x. The backward rows carry the recompute accounting: the custom_vjp saves
 only O(N*D) residuals, so ``residual_bytes`` (measured from the actual VJP
 residual pytree) vs ``xla_saved_bytes`` (the (N,F) gate/up/h intermediates
 autodiff would keep) is the per-layer activation-memory win, asserted here
@@ -156,6 +158,122 @@ def dispatcher_comparison(rng, rows):
     })
 
 
+def quant_rows(rng, rows):
+    """bf16 vs int8 streamed-operand bytes on BOTH fused-dequant paths.
+
+    ``bytes_per_row`` counts the stationary operand each kernel streams
+    from HBM per compute row — expert weights + per-channel scales per
+    grouped-GEMM row, referenced KV pages + per-token scale sidecar per
+    decode query. That is the term int8 shrinks (the activation traffic is
+    identical across each pair, so including it would only dilute the
+    ratio the quantization actually changes). Asserted here: >= 1.8x
+    reduction on both paths — the bandwidth claim behind the quant flags."""
+    from repro.core.quant import quantize_kv, quantize_weight
+    from repro.kernels.ops import (
+        grouped_gemm_q8,
+        paged_attention,
+        paged_attention_q8,
+    )
+    from repro.kernels.ref import (
+        grouped_gemm_q8_ref,
+        paged_attention_q8_ref,
+        paged_attention_ref,
+    )
+
+    # -- grouped GEMM: int8 weights, bf16 activations -------------------------
+    E, k, T, D, F = 8, 2, 1024, 256, 512
+    N, bc = T * k, 128
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.05
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), jnp.bfloat16) * 0.05
+    gs = jnp.full((E,), N // E, jnp.int32)
+    xs = jnp.asarray(rng.standard_normal((N, D)), jnp.bfloat16) * 0.3
+
+    (qg, sg), (qu, su), (qd, sd) = map(quantize_weight, (wg, wu, wd))
+    qargs = (xs, qg, qu, qd, sg, su, sd)
+    us_bf16 = timed(jax.jit(grouped_gemm_xla), xs, wg, wu, wd, gs) * 1e6
+    us_q8 = timed(jax.jit(grouped_gemm_q8_ref), *qargs, gs) * 1e6
+    err_bf16 = float(jnp.max(jnp.abs(
+        grouped_gemm(xs, wg, wu, wd, gs, row_block=bc).astype(jnp.float32)
+        - grouped_gemm_xla(xs, wg, wu, wd, gs).astype(jnp.float32))))
+    err_q8 = float(jnp.max(jnp.abs(
+        grouped_gemm_q8(*qargs, gs, row_block=bc).astype(jnp.float32)
+        - grouped_gemm_q8_ref(*qargs, gs).astype(jnp.float32))))
+    quant_err = float(jnp.max(jnp.abs(
+        grouped_gemm_q8_ref(*qargs, gs).astype(jnp.float32)
+        - grouped_gemm_xla(xs, wg, wu, wd, gs).astype(jnp.float32))))
+    bpr_bf16 = E * 3 * D * F * 2 / N
+    bpr_q8 = E * (3 * D * F * 1 + (2 * F + D) * 2) / N  # int8 + bf16 scales
+    gemm_ratio = bpr_bf16 / bpr_q8
+    for tag, us, err, bpr, extra in (
+        ("bf16", us_bf16, err_bf16, bpr_bf16, "weight traffic baseline"),
+        ("int8", us_q8, err_q8, bpr_q8,
+         f"{gemm_ratio:.2f}x fewer weight bytes/row; "
+         f"quant err {quant_err:.3f} vs bf16"),
+    ):
+        rows.append({
+            "name": f"grouped_gemm_{tag} e8t2 N{N} D{D} F{F}",
+            "us_fwd_xla_ref": round(us, 1),
+            "kernel_max_err": round(err, 5),
+            "gemm_rows": N,
+            "activation_bytes": N * (D + F + D) * 2,
+            "bytes_per_row": round(bpr, 1),
+            "derived": extra,
+        })
+    assert gemm_ratio >= 1.8, (
+        f"int8 grouped-GEMM weight bytes/row only {gemm_ratio:.2f}x smaller "
+        f"(need >= 1.8x)"
+    )
+
+    # -- paged attention: int8 KV pages + f32 scale sidecar -------------------
+    P, ps, B, H, KV, d = 32, 8, 4, 8, 2, 64
+    maxP = 6
+    kp = jnp.asarray(rng.standard_normal((P, ps, KV, d)), jnp.bfloat16) * 0.3
+    vp = jnp.asarray(rng.standard_normal((P, ps, KV, d)), jnp.bfloat16) * 0.3
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.bfloat16) * 0.3
+    bt = jnp.asarray(
+        rng.permutation(P)[: B * maxP].reshape(B, maxP), jnp.int32
+    )
+    sl = jnp.asarray(rng.integers(ps, maxP * ps, B), jnp.int32)
+    kq, ks = quantize_kv(kp)
+    vq, vs = quantize_kv(vp)
+
+    us_pa_bf16 = timed(jax.jit(paged_attention_ref), q, kp, vp, bt, sl) * 1e6
+    us_pa_q8 = timed(jax.jit(paged_attention_q8_ref),
+                     q, kq, vq, ks, vs, bt, sl) * 1e6
+    err_pa_bf16 = float(jnp.max(jnp.abs(
+        paged_attention(q, kp, vp, bt, sl).astype(jnp.float32)
+        - paged_attention_ref(q, kp, vp, bt, sl).astype(jnp.float32))))
+    err_pa_q8 = float(jnp.max(jnp.abs(
+        paged_attention_q8(q, kq, vq, ks, vs, bt, sl).astype(jnp.float32)
+        - paged_attention_q8_ref(q, kq, vq, ks, vs, bt, sl).astype(jnp.float32))))
+    pa_quant_err = float(jnp.max(jnp.abs(
+        paged_attention_q8_ref(q, kq, vq, ks, vs, bt, sl).astype(jnp.float32)
+        - paged_attention_ref(q, kp, vp, bt, sl).astype(jnp.float32))))
+    # per decode query: k+v entries of every referenced page (token x head)
+    pa_bpr_bf16 = maxP * ps * KV * 2 * (d * 2)
+    pa_bpr_q8 = maxP * ps * KV * 2 * (d * 1 + 4)  # int8 + f32 scale
+    pa_ratio = pa_bpr_bf16 / pa_bpr_q8
+    for tag, us, err, bpr, extra in (
+        ("bf16", us_pa_bf16, err_pa_bf16, pa_bpr_bf16, "KV traffic baseline"),
+        ("int8", us_pa_q8, err_pa_q8, pa_bpr_q8,
+         f"{pa_ratio:.2f}x fewer KV bytes/query; "
+         f"quant err {pa_quant_err:.3f} vs bf16"),
+    ):
+        rows.append({
+            "name": f"paged_attn_{tag} P{P} ps{ps} B{B} H{H} KV{KV} d{d}",
+            "us_fwd_xla_ref": round(us, 1),
+            "kernel_max_err": round(err, 5),
+            "gemm_rows": B * H,
+            "activation_bytes": B * H * d * 2,
+            "bytes_per_row": round(bpr, 1),
+            "derived": extra,
+        })
+    assert pa_ratio >= 1.8, (
+        f"int8 KV bytes/query only {pa_ratio:.2f}x smaller (need >= 1.8x)"
+    )
+
+
 def flash_rows(rng, rows):
     for (B, S, H, KV, d) in [(2, 1024, 8, 2, 128), (1, 2048, 4, 4, 64)]:
         q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.bfloat16) * 0.3
@@ -196,9 +314,10 @@ def main():
     expert_gemm_rows(rng, rows)
     grouped_gemm_rows(rng, rows)
     dispatcher_comparison(rng, rows)
+    quant_rows(rng, rows)
     flash_rows(rng, rows)
     keys = ["name", "us_fwd_xla_ref", "us_fwdbwd_xla_ref", "kernel_max_err",
-            "gemm_rows", "activation_bytes", "derived"]
+            "gemm_rows", "activation_bytes", "bytes_per_row", "derived"]
     emit("kernel_bench", rows, keys)
     with open(ROOT_JSON, "w") as f:
         json.dump({"schema": keys, "rows": rows}, f, indent=1)

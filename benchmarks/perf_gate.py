@@ -60,7 +60,7 @@ _INFO_MARKERS = ("anomaly", "shed", "evict", "skipped", "rollback",
 # baseline predates them — a bench edit that silently drops a coverage
 # section must fail here, not ride through as "new keys pass".
 REQUIRED_SECTIONS = {
-    "BENCH_serving.json": ("prefix_reuse", "speculation"),
+    "BENCH_serving.json": ("prefix_reuse", "speculation", "quant"),
 }
 
 

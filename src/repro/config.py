@@ -151,6 +151,12 @@ class ModelConfig:
 
     # numerics
     dtype: str = "bfloat16"
+    # Serving-side low precision (core/quant.py): "int8" expert FFN weights
+    # (per-expert per-output-channel scales, dequant fused into the Pallas
+    # GEMMs) and "int8" KV pages (per-token scale sidecars in the page
+    # pool). Inference-only — training and backward kernels stay `dtype`.
+    quant_weights: str = "none"  # none | int8
+    quant_kv: str = "none"  # none | int8
     # Megatron-style vocab padding so the vocab dim always shards.
     vocab_divisor: int = 2048
 
@@ -163,6 +169,17 @@ class ModelConfig:
     # the Megatron microbatch knob — bounds per-microbatch activation memory
     # so the step fits HBM; grads accumulate in fp32 across microbatches.
     train_microbatches: int = 1
+
+    QUANT_MODES = ("none", "int8")
+
+    def __post_init__(self):
+        assert self.quant_weights in self.QUANT_MODES, (
+            f"quant_weights must be one of {self.QUANT_MODES}, "
+            f"got {self.quant_weights!r}"
+        )
+        assert self.quant_kv in self.QUANT_MODES, (
+            f"quant_kv must be one of {self.QUANT_MODES}, got {self.quant_kv!r}"
+        )
 
     # ----- derived -----
     @property

@@ -183,15 +183,42 @@ def expert_ffn(
     * sorted: ``(N, D) -> (N, D)`` with ``layout.group_sizes`` rows per
       expert; Pallas group-size-aware ``grouped_gemm`` or the
       ``lax.ragged_dot`` XLA path.
-    """
-    if layout.kind == "sorted":
-        from repro.kernels.ops import grouped_gemm, grouped_gemm_xla
 
+    int8 experts (core/quant.py dicts carrying ``*_scale`` keys) route to
+    the fused-dequant kernels on the Pallas path; the XLA paths dequantize
+    the weights up front (functionally identical, no byte savings) so every
+    dispatcher keeps working under quantization.
+    """
+    from repro.core.quant import dequantize_experts, is_quantized
+
+    quant = is_quantized(experts)
+    if layout.kind == "sorted":
+        from repro.kernels.ops import grouped_gemm, grouped_gemm_q8, grouped_gemm_xla
+
+        if use_kernel and quant:
+            return grouped_gemm_q8(
+                xe, experts["w_gate"], experts["w_up"], experts["w_down"],
+                experts["w_gate_scale"], experts["w_up_scale"],
+                experts["w_down_scale"], layout.group_sizes,
+                row_block=layout.row_block,
+            )
+        if quant:
+            experts = dequantize_experts(experts, xe.dtype)
         args = (xe, experts["w_gate"], experts["w_up"], experts["w_down"],
                 layout.group_sizes)
         if use_kernel:
             return grouped_gemm(*args, row_block=layout.row_block)
         return grouped_gemm_xla(*args)
+    if use_kernel and quant:
+        from repro.kernels.ops import expert_gemm_q8
+
+        return expert_gemm_q8(
+            xe, experts["w_gate"], experts["w_up"], experts["w_down"],
+            experts["w_gate_scale"], experts["w_up_scale"],
+            experts["w_down_scale"],
+        )
+    if quant:
+        experts = dequantize_experts(experts, xe.dtype)
     if use_kernel:
         from repro.kernels.ops import expert_gemm
 

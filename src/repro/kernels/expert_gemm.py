@@ -105,7 +105,7 @@ def _down_kernel(h_ref, wd_ref, y_ref, acc, *, nf: int):
         y_ref[0] = acc[...].astype(y_ref.dtype)
 
 
-def _pick(block: int, dim: int, align: int = 128) -> int:
+def _pick(block: int, dim: int, align: int = 128, itemsize: int = 2) -> int:
     """Largest tile <= ``block`` that divides ``dim``, ``align``-aligned.
 
     ``align=128`` (lane dims F/D): the tile is the largest multiple-of-128
@@ -115,7 +115,16 @@ def _pick(block: int, dim: int, align: int = 128) -> int:
     smaller split asserts. ``align=8`` (the sublane/row dim C): prefer a
     multiple-of-8 tile but fall back to the largest divisor — arbitrary
     capacities (e.g. C=282 from a CF ceil) stay legal as they always were.
+
+    ``itemsize`` is the element byte width of the tensor streamed along
+    this dim; the ``block`` budget is calibrated in bf16-equivalent
+    elements (itemsize=2), so int8 operands (itemsize=1) get twice the
+    rows at the same VMEM byte budget and f32 half. The scaled tile goes
+    through the same divisor search, so lane alignment still holds (the
+    ``align>=128`` assert below fires on any misaligned split).
     """
+    assert itemsize in (1, 2, 4), itemsize
+    block = max(1, (block * 2) // itemsize)
     b = min(block, dim)
     for cand in range(b - b % align, 0, -align):
         if dim % cand == 0:
@@ -611,4 +620,267 @@ def grouped_gemm(
 ) -> jax.Array:
     return _grouped_gemm_p(
         xs, w_gate, w_up, w_down, group_sizes, tuple(blocks), interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 weights with dequant fused into the tile (serving/inference only)
+#
+# Weights are symmetric per-expert per-output-channel int8 (core/quant.py):
+# gate/up scales over F, down over D. The scale is constant along the
+# contraction dim, so dequant commutes with the matmul — the kernels load
+# int8 tiles (half the HBM traffic of bf16), cast to the activation dtype
+# for the MXU (int8 values are exact in bf16), accumulate in fp32, and
+# multiply by the scale tile once in the epilogue. Mathematically identical
+# to dequantize-then-matmul; fused SwiGLU and row masking are unchanged
+# from the bf16 kernels above. The int8 contraction dim gets a 2x-rows
+# weight tile at the same VMEM byte budget via _pick(itemsize=1); fp32
+# accumulator tiles keep their bf16-path sizes. Forward-only: the PR 2
+# custom_vjp backward kernels stay bf16.
+# ---------------------------------------------------------------------------
+
+
+def _gate_up_kernel_q8(
+    x_ref, wg_ref, wu_ref, sg_ref, su_ref, h_ref, g_acc, u_acc, *, nd: int
+):
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        u_acc[...] = jnp.zeros_like(u_acc)
+
+    x = x_ref[0]
+    g_acc[...] += jnp.dot(x, wg_ref[0].astype(x.dtype), preferred_element_type=jnp.float32)
+    u_acc[...] += jnp.dot(x, wu_ref[0].astype(x.dtype), preferred_element_type=jnp.float32)
+
+    @pl.when(d == nd - 1)
+    def _epilogue():
+        g = g_acc[...] * sg_ref[0].astype(jnp.float32)
+        u = u_acc[...] * su_ref[0].astype(jnp.float32)
+        h_ref[0] = (_silu(g) * u).astype(h_ref.dtype)
+
+
+def _down_kernel_q8(h_ref, wd_ref, sd_ref, y_ref, acc, *, nf: int):
+    f = pl.program_id(3)
+
+    @pl.when(f == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(
+        h_ref[0], wd_ref[0].astype(h_ref.dtype), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(f == nf - 1)
+    def _write():
+        y_ref[0] = (acc[...] * sd_ref[0].astype(jnp.float32)).astype(y_ref.dtype)
+
+
+def _expert_fwd_q8_impl(
+    xe: jax.Array,  # (E, C, D)
+    w_gate: jax.Array,  # (E, D, F) int8
+    w_up: jax.Array,  # (E, D, F) int8
+    w_down: jax.Array,  # (E, F, D) int8
+    s_gate: jax.Array,  # (E, F) bf16 per-output-channel scales
+    s_up: jax.Array,  # (E, F)
+    s_down: jax.Array,  # (E, D)
+    blocks: Tuple[int, int, int],
+    interpret: bool,
+) -> jax.Array:
+    E, C, D = xe.shape
+    F = w_gate.shape[-1]
+    bc = _pick(blocks[0], C, align=8)
+    # output tiles size the fp32 accumulators -> bf16-equivalent budget;
+    # int8 contraction tiles stream 2x the rows at the same byte budget
+    bf_o, bd_o = _pick(blocks[1], F), _pick(blocks[2], D)
+    bd_c = _pick(blocks[2], D, itemsize=1)
+    bf_c = _pick(blocks[1], F, itemsize=1)
+    nc = C // bc
+
+    h = pl.pallas_call(
+        functools.partial(_gate_up_kernel_q8, nd=D // bd_c),
+        grid=(E, nc, F // bf_o, D // bd_c),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd_c), lambda e, c, f, d: (e, c, d)),
+            pl.BlockSpec((1, bd_c, bf_o), lambda e, c, f, d: (e, d, f)),
+            pl.BlockSpec((1, bd_c, bf_o), lambda e, c, f, d: (e, d, f)),
+            pl.BlockSpec((1, bf_o), lambda e, c, f, d: (e, f)),
+            pl.BlockSpec((1, bf_o), lambda e, c, f, d: (e, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf_o), lambda e, c, f, d: (e, c, f)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), xe.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bc, bf_o), jnp.float32),
+            pltpu.VMEM((bc, bf_o), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xe, w_gate, w_up, s_gate, s_up)
+
+    y = pl.pallas_call(
+        functools.partial(_down_kernel_q8, nf=F // bf_c),
+        grid=(E, nc, D // bd_o, F // bf_c),
+        in_specs=[
+            pl.BlockSpec((1, bc, bf_c), lambda e, c, d, f: (e, c, f)),
+            pl.BlockSpec((1, bf_c, bd_o), lambda e, c, d, f: (e, f, d)),
+            pl.BlockSpec((1, bd_o), lambda e, c, d, f: (e, d)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bd_o), lambda e, c, d, f: (e, c, d)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), xe.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bd_o), jnp.float32)],
+        interpret=interpret,
+    )(h, w_down, s_down)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def expert_gemm_q8(
+    xe: jax.Array,  # (E, C, D)
+    w_gate: jax.Array,  # (E, D, F) int8
+    w_up: jax.Array,  # (E, D, F) int8
+    w_down: jax.Array,  # (E, F, D) int8
+    s_gate: jax.Array,  # (E, F)
+    s_up: jax.Array,  # (E, F)
+    s_down: jax.Array,  # (E, D)
+    blocks: Tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jax.Array:
+    return _expert_fwd_q8_impl(
+        xe, w_gate, w_up, w_down, s_gate, s_up, s_down, tuple(blocks), interpret
+    )
+
+
+def _grouped_gate_up_kernel_q8(
+    tg_ref, tr_ref, x_ref, wg_ref, wu_ref, sg_ref, su_ref, h_ref, g_acc, u_acc,
+    *, nd: int, bc: int, bf: int,
+):
+    t, d = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        u_acc[...] = jnp.zeros_like(u_acc)
+
+    valid = tr_ref[t]
+
+    @pl.when(valid > 0)
+    def _compute():
+        x = x_ref[...]
+        g_acc[...] += jnp.dot(x, wg_ref[0].astype(x.dtype), preferred_element_type=jnp.float32)
+        u_acc[...] += jnp.dot(x, wu_ref[0].astype(x.dtype), preferred_element_type=jnp.float32)
+
+    @pl.when(d == nd - 1)
+    def _epilogue():
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bc, bf), 0)
+        g = g_acc[...] * sg_ref[0].astype(jnp.float32)
+        u = u_acc[...] * su_ref[0].astype(jnp.float32)
+        h = _silu(g) * u
+        h_ref[...] = jnp.where(rows < valid, h, 0.0).astype(h_ref.dtype)
+
+
+def _grouped_down_kernel_q8(
+    tg_ref, tr_ref, h_ref, wd_ref, sd_ref, y_ref, acc, *, nf: int, bc: int, bd: int
+):
+    t, f = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    valid = tr_ref[t]
+
+    @pl.when(valid > 0)
+    def _compute():
+        acc[...] += jnp.dot(
+            h_ref[...], wd_ref[0].astype(h_ref.dtype), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(f == nf - 1)
+    def _write():
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bc, bd), 0)
+        y = acc[...] * sd_ref[0].astype(jnp.float32)
+        y_ref[...] = jnp.where(rows < valid, y, 0.0).astype(y_ref.dtype)
+
+
+def _grouped_fwd_q8_impl(
+    xs: jax.Array,  # (N_pad, D) expert-sorted rows, groups row-tile aligned
+    w_gate: jax.Array,  # (E, D, F) int8
+    w_up: jax.Array,  # (E, D, F) int8
+    w_down: jax.Array,  # (E, F, D) int8
+    s_gate: jax.Array,  # (E, F)
+    s_up: jax.Array,  # (E, F)
+    s_down: jax.Array,  # (E, D)
+    group_sizes: jax.Array,  # (E,) int32 valid rows per expert
+    blocks: Tuple[int, int, int],
+    interpret: bool,
+) -> jax.Array:
+    N_pad, D = xs.shape
+    E, _, F = w_gate.shape
+    bc = blocks[0]
+    assert N_pad % bc == 0, (N_pad, bc)
+    bf_o, bd_o = _pick(blocks[1], F), _pick(blocks[2], D)
+    bd_c = _pick(blocks[2], D, itemsize=1)
+    bf_c = _pick(blocks[1], F, itemsize=1)
+    nt = N_pad // bc
+    tg, tr = group_tiling(group_sizes, nt, bc)
+
+    h = pl.pallas_call(
+        functools.partial(
+            _grouped_gate_up_kernel_q8, nd=D // bd_c, bc=bc, bf=bf_o
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nt, F // bf_o, D // bd_c),
+            in_specs=[
+                pl.BlockSpec((bc, bd_c), lambda t, f, d, tg, tr: (t, d)),
+                pl.BlockSpec((1, bd_c, bf_o), lambda t, f, d, tg, tr: (tg[t], d, f)),
+                pl.BlockSpec((1, bd_c, bf_o), lambda t, f, d, tg, tr: (tg[t], d, f)),
+                pl.BlockSpec((1, bf_o), lambda t, f, d, tg, tr: (tg[t], f)),
+                pl.BlockSpec((1, bf_o), lambda t, f, d, tg, tr: (tg[t], f)),
+            ],
+            out_specs=pl.BlockSpec((bc, bf_o), lambda t, f, d, tg, tr: (t, f)),
+            scratch_shapes=[
+                pltpu.VMEM((bc, bf_o), jnp.float32),
+                pltpu.VMEM((bc, bf_o), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((N_pad, F), xs.dtype),
+        interpret=interpret,
+    )(tg, tr, xs, w_gate, w_up, s_gate, s_up)
+
+    y = pl.pallas_call(
+        functools.partial(_grouped_down_kernel_q8, nf=F // bf_c, bc=bc, bd=bd_o),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nt, D // bd_o, F // bf_c),
+            in_specs=[
+                pl.BlockSpec((bc, bf_c), lambda t, d, f, tg, tr: (t, f)),
+                pl.BlockSpec((1, bf_c, bd_o), lambda t, d, f, tg, tr: (tg[t], f, d)),
+                pl.BlockSpec((1, bd_o), lambda t, d, f, tg, tr: (tg[t], d)),
+            ],
+            out_specs=pl.BlockSpec((bc, bd_o), lambda t, d, f, tg, tr: (t, d)),
+            scratch_shapes=[pltpu.VMEM((bc, bd_o), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((N_pad, D), xs.dtype),
+        interpret=interpret,
+    )(tg, tr, h, w_down, s_down)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def grouped_gemm_q8(
+    xs: jax.Array,  # (N_pad, D) expert-sorted rows, groups row-tile aligned
+    w_gate: jax.Array,  # (E, D, F) int8
+    w_up: jax.Array,  # (E, D, F) int8
+    w_down: jax.Array,  # (E, F, D) int8
+    s_gate: jax.Array,  # (E, F)
+    s_up: jax.Array,  # (E, F)
+    s_down: jax.Array,  # (E, D)
+    group_sizes: jax.Array,  # (E,) int32 valid rows per expert
+    blocks: Tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jax.Array:
+    return _grouped_fwd_q8_impl(
+        xs, w_gate, w_up, w_down, s_gate, s_up, s_down, group_sizes,
+        tuple(blocks), interpret,
     )

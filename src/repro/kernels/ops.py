@@ -52,6 +52,38 @@ def grouped_gemm(xs, w_gate, w_up, w_down, group_sizes, row_block=_eg.DEFAULT_BL
     )
 
 
+def expert_gemm_q8(xe, w_gate, w_up, w_down, s_gate, s_up, s_down,
+                   blocks=_eg.DEFAULT_BLOCKS):
+    """int8-weight padded expert FFN with dequant fused into the tile:
+    weights int8 (core/quant.py layout), per-expert per-output-channel
+    scales applied to the fp32 accumulator in the epilogue. Forward-only
+    (serving); same leading-dim folding as :func:`expert_gemm`."""
+    lead = xe.shape[:-3]
+    E, C, D = xe.shape[-3:]
+    if lead:
+        x3 = xe.reshape((-1, E, C, D)).transpose(1, 0, 2, 3).reshape(E, -1, D)
+        y = _eg.expert_gemm_q8(
+            x3, w_gate, w_up, w_down, s_gate, s_up, s_down,
+            blocks=blocks, interpret=_interpret(),
+        )
+        return y.reshape(E, -1, C, D).transpose(1, 0, 2, 3).reshape(lead + (E, C, D))
+    return _eg.expert_gemm_q8(
+        xe, w_gate, w_up, w_down, s_gate, s_up, s_down,
+        blocks=blocks, interpret=_interpret(),
+    )
+
+
+def grouped_gemm_q8(xs, w_gate, w_up, w_down, s_gate, s_up, s_down,
+                    group_sizes, row_block=_eg.DEFAULT_BLOCKS[0]):
+    """int8-weight grouped GEMM over the sorted layout (fused dequant,
+    fp32 accumulate, SwiGLU epilogue unchanged). Forward-only."""
+    blocks = (row_block,) + _eg.DEFAULT_BLOCKS[1:]
+    return _eg.grouped_gemm_q8(
+        xs, w_gate, w_up, w_down, s_gate, s_up, s_down, group_sizes,
+        blocks=blocks, interpret=_interpret(),
+    )
+
+
 def grouped_gemm_xla(xs, w_gate, w_up, w_down, group_sizes):
     """XLA path for the sorted layout (compact buffer, row_block=1):
     ``lax.ragged_dot`` is the native grouped GEMM; falls back to the
@@ -87,4 +119,17 @@ def paged_attention(
     return _pa.paged_attention(
         q, k_pool, v_pool, block_table, seq_lens, window=window, scale=scale,
         interpret=_interpret(),
+    )
+
+
+def paged_attention_q8(
+    q, k_pool, v_pool, k_scale, v_scale, block_table, seq_lens,
+    window: Optional[int] = None, scale: Optional[float] = None,
+):
+    """int8-KV decode: pools are int8 with per-token/kv-head f32 scale
+    sidecars shaped (num_pages, page_size, KV, 1); the kernel dequantizes
+    each page tile in VMEM after the scalar-prefetched block-table DMA."""
+    return _pa.paged_attention_q8(
+        q, k_pool, v_pool, k_scale, v_scale, block_table, seq_lens,
+        window=window, scale=scale, interpret=_interpret(),
     )

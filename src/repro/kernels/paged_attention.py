@@ -143,3 +143,122 @@ def paged_attention(
         interpret=interpret,
     )(bt, sl, qg, k_pool, v_pool)
     return out.reshape(B, H, d)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV pages: dequant fused into the per-page tile
+#
+# Pages hold int8 KV with a per-token, per-kv-head f32 scale sidecar shaped
+# like the page payload with the head dim collapsed to 1 (serving/kv_cache
+# keeps the sidecar leaves in the same pool tree so COW/defrag/DP-sharding
+# move scales with their pages). The kernel resolves pages through the same
+# scalar-prefetched block tables and dequantizes each (page_size, d) tile in
+# VMEM right after the DMA: k/v int8 loads halve the HBM stream, scores and
+# the weighted-value accumulation run in f32 (int8 values are exact in f32,
+# so parity vs the dequantize-then-attend oracle is accumulation-order only).
+# ---------------------------------------------------------------------------
+
+
+def _pa_kernel_q8(
+    bt_ref, len_ref,
+    q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, ps: int, maxP: int, window: Optional[int], scale: float,
+):
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    page = bt_ref[b, j]
+    n = len_ref[b]
+    live = jnp.logical_and(page >= 0, j * ps < n)
+    if window is not None:
+        live = jnp.logical_and(live, (j + 1) * ps - 1 > n - 1 - window)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+        k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0]  # (ps, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        mask = kpos < n
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > n - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        m_scr[...] = m_new
+        v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0]  # (ps, d)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+
+    pl.when(live)(_compute)
+
+    @pl.when(j == maxP - 1)
+    def _write():
+        l = l_scr[...]
+        safe = jnp.maximum(l, 1e-30)
+        o_ref[0, 0] = jnp.where(
+            (l > 0)[:, None], acc_scr[...] / safe[:, None], 0.0
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
+def paged_attention_q8(
+    q: jax.Array,  # (B, H, d) one query token per sequence
+    k_pool: jax.Array,  # (num_pages, page_size, KV, d) int8
+    v_pool: jax.Array,  # (num_pages, page_size, KV, d) int8
+    k_scale: jax.Array,  # (num_pages, page_size, KV, 1) f32 sidecar
+    v_scale: jax.Array,  # (num_pages, page_size, KV, 1)
+    block_table: jax.Array,  # (B, max_pages) int32, -1 = unassigned
+    seq_lens: jax.Array,  # (B,) int32 valid tokens (incl. current)
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, d = q.shape
+    num_pages, ps, KV, _ = k_pool.shape
+    maxP = block_table.shape[1]
+    G = H // KV
+    assert H % KV == 0, (H, KV)
+    assert k_scale.shape == (num_pages, ps, KV, 1), k_scale.shape
+    scale = float(scale) if scale is not None else d**-0.5
+
+    qg = q.reshape(B, KV, G, d)
+    bt = block_table.astype(jnp.int32)
+    sl = seq_lens.astype(jnp.int32)
+    _page = lambda b, kv, j, bt, sl: (jnp.maximum(bt[b, j], 0), 0, kv, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _pa_kernel_q8, ps=ps, maxP=maxP, window=window, scale=scale
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, maxP),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, d), lambda b, kv, j, bt, sl: (b, kv, 0, 0)),
+                pl.BlockSpec((1, ps, 1, d), _page),
+                pl.BlockSpec((1, ps, 1, d), _page),
+                pl.BlockSpec((1, ps, 1, 1), _page),
+                pl.BlockSpec((1, ps, 1, 1), _page),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, G, d), lambda b, kv, j, bt, sl: (b, kv, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, d), q.dtype),
+        interpret=interpret,
+    )(bt, sl, qg, k_pool, v_pool, k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+    return out.reshape(B, H, d)

@@ -51,6 +51,70 @@ def grouped_gemm_ref(
     return out.astype(xs.dtype)
 
 
+def expert_gemm_q8_ref(
+    xe: jax.Array,  # (E, C, D)
+    w_gate: jax.Array,  # (E, D, F) int8
+    w_up: jax.Array,  # (E, D, F) int8
+    w_down: jax.Array,  # (E, F, D) int8
+    s_gate: jax.Array,  # (E, F) per-output-channel scales
+    s_up: jax.Array,  # (E, F)
+    s_down: jax.Array,  # (E, D)
+) -> jax.Array:
+    """Oracle for the fused-dequant int8 expert FFN: int8 weights cast to
+    the activation dtype for the matmul (exact — |q| <= 127), fp32
+    accumulate, scale applied to the accumulator (per-output-channel
+    scales commute with the contraction). Mirrors the kernel math."""
+    wdt = xe.dtype
+    g = jnp.einsum(
+        "ecd,edf->ecf", xe, w_gate.astype(wdt), preferred_element_type=jnp.float32
+    ) * s_gate[:, None, :].astype(jnp.float32)
+    u = jnp.einsum(
+        "ecd,edf->ecf", xe, w_up.astype(wdt), preferred_element_type=jnp.float32
+    ) * s_up[:, None, :].astype(jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(xe.dtype)
+    y = jnp.einsum(
+        "ecf,efd->ecd", h, w_down.astype(wdt), preferred_element_type=jnp.float32
+    ) * s_down[:, None, :].astype(jnp.float32)
+    return y.astype(xe.dtype)
+
+
+def grouped_gemm_q8_ref(
+    xs: jax.Array,  # (N, D) expert-sorted rows (may be tile-align padded)
+    w_gate: jax.Array,  # (E, D, F) int8
+    w_up: jax.Array,  # (E, D, F) int8
+    w_down: jax.Array,  # (E, F, D) int8
+    s_gate: jax.Array,  # (E, F)
+    s_up: jax.Array,  # (E, F)
+    s_down: jax.Array,  # (E, D)
+    group_sizes: jax.Array,  # (E,) valid rows per expert
+    row_block: int = 1,
+) -> jax.Array:
+    """int8 grouped-GEMM oracle over the sorted layout; same region/mask
+    logic as :func:`grouped_gemm_ref`, kernel-mirroring dequant math."""
+    N, D = xs.shape
+    E = w_gate.shape[0]
+    b = row_block
+    padded = ((group_sizes + b - 1) // b) * b
+    starts = jnp.cumsum(padded) - padded
+    row = jnp.arange(N)
+    out = jnp.zeros((N, w_down.shape[-1]), jnp.float32)
+    wdt = xs.dtype
+    for e in range(E):
+        g = jnp.dot(
+            xs, w_gate[e].astype(wdt), preferred_element_type=jnp.float32
+        ) * s_gate[e].astype(jnp.float32)
+        u = jnp.dot(
+            xs, w_up[e].astype(wdt), preferred_element_type=jnp.float32
+        ) * s_up[e].astype(jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(xs.dtype)
+        y = jnp.dot(
+            h, w_down[e].astype(wdt), preferred_element_type=jnp.float32
+        ) * s_down[e].astype(jnp.float32)
+        mine = (row >= starts[e]) & (row < starts[e] + group_sizes[e])
+        out = jnp.where(mine[:, None], y, out)
+    return out.astype(xs.dtype)
+
+
 def paged_attention_ref(
     q: jax.Array,  # (B, H, d) one query token per sequence
     k_pool: jax.Array,  # (num_pages, page_size, KV, d) shared page pool
@@ -91,6 +155,29 @@ def paged_attention_ref(
     # uniform-softmax average of garbage — keeps the kernel parity exact
     out = jnp.where(valid.any(-1)[:, None, None, None], out, 0.0)
     return out.reshape(B, H, d).astype(v_pool.dtype)
+
+
+def paged_attention_q8_ref(
+    q: jax.Array,  # (B, H, d)
+    k_pool: jax.Array,  # (num_pages, page_size, KV, d) int8
+    v_pool: jax.Array,  # (num_pages, page_size, KV, d) int8
+    k_scale: jax.Array,  # (num_pages, page_size, KV, 1) per-token scales
+    v_scale: jax.Array,  # (num_pages, page_size, KV, 1)
+    block_table: jax.Array,  # (B, max_pages) int32 page ids, -1 = unassigned
+    seq_lens: jax.Array,  # (B,) int32
+    window=None,
+    scale=None,
+) -> jax.Array:
+    """int8-KV oracle: dequantize the pools (per-token, per-kv-head
+    sidecar scales) in f32 and run the bf16 paged-attention oracle on the
+    result. Returns q.dtype."""
+    kd = k_pool.astype(jnp.float32) * k_scale.astype(jnp.float32)
+    vd = v_pool.astype(jnp.float32) * v_scale.astype(jnp.float32)
+    out = paged_attention_ref(
+        q.astype(jnp.float32), kd, vd, block_table, seq_lens,
+        window=window, scale=scale,
+    )
+    return out.astype(q.dtype)
 
 
 def flash_attention_ref(

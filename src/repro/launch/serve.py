@@ -74,9 +74,19 @@ def main(argv=None):
                     help="drafter architecture for --speculate (must share "
                          "the tokenizer/vocab; independently initialized, so "
                          "expect low acceptance — a correctness demo)")
+    ap.add_argument("--quant-weights", default="none",
+                    choices=["none", "int8"],
+                    help="serve int8 expert-FFN weights (per-channel scales, "
+                         "dequant fused into the Pallas epilogue)")
+    ap.add_argument("--quant-kv", default="none", choices=["none", "int8"],
+                    help="int8 KV pages with a per-token scale sidecar "
+                         "(requires --cache-mode paged)")
     args = ap.parse_args(argv)
     if (args.speculate or args.prefix_cache) and args.cache_mode != "paged":
         ap.error("--speculate/--prefix-cache require --cache-mode paged")
+    if args.quant_kv != "none" and args.cache_mode != "paged":
+        ap.error("--quant-kv requires --cache-mode paged (the scale sidecar "
+                 "lives in the page pool)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -99,7 +109,8 @@ def main(argv=None):
                   deadline_steps=args.deadline_steps or None,
                   max_queue=args.max_queue or None,
                   shed_watermark=args.shed_watermark or None,
-                  prefix_cache=args.prefix_cache)
+                  prefix_cache=args.prefix_cache,
+                  quant_weights=args.quant_weights, quant_kv=args.quant_kv)
     if args.speculate:
         from repro.serving.speculative import SpeculativeEngine
 
@@ -164,6 +175,9 @@ def main(argv=None):
     print(f"served {len(accepted)} requests ({shed} shed), {total_tokens} "
           f"tokens in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
           f"batch={args.max_batch}, cache={args.cache_mode})")
+    if args.quant_weights != "none" or args.quant_kv != "none":
+        print(f"  quant: weights={args.quant_weights}, kv={args.quant_kv} "
+              f"(int8 payloads, fp32 accumulate, scales in sidecars)")
     h = engine.health()
     expired = [r.rid for r in accepted if r.status == "deadline"]
     if expired:

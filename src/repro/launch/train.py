@@ -73,6 +73,12 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--step-timeout", type=float, default=0.0,
                     help="per-step wall-clock watchdog in seconds "
                          "(0 = disabled); a hung step raises HangError")
+    ap.add_argument("--quant-weights", default="none",
+                    choices=["none", "int8"],
+                    help="after training, re-run the held-out eval with "
+                         "int8-quantized expert-FFN weights (the serving "
+                         "path's quantization) and report the CE delta; "
+                         "training itself stays bf16")
     return ap
 
 
@@ -187,7 +193,23 @@ def main(argv=None):
 
         save_checkpoint(args.save_ckpt, tr.params, step=args.steps)
         print(f"saved checkpoint to {args.save_ckpt}")
-    print(f"final held-out CE: {tr.eval_loss(batches=4):.4f}")
+    ce = tr.eval_loss(batches=4)
+    print(f"final held-out CE: {ce:.4f}")
+    if args.quant_weights == "int8":
+        if cfg.moe is None:
+            print("--quant-weights int8: dense config has no expert FFNs; "
+                  "nothing to quantize")
+        else:
+            from repro.core.quant import quantize_params
+
+            # serving-style inference check: quantize a copy of the expert
+            # weights, eval, restore — the TrainState keeps its bf16 params
+            dense_params = tr.params
+            tr.params = quantize_params(dense_params)
+            qce = tr.eval_loss(batches=4)
+            tr.params = dense_params
+            print(f"int8-expert held-out CE: {qce:.4f} "
+                  f"(delta {qce - ce:+.4f} vs bf16)")
     return tr
 
 

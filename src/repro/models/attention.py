@@ -308,6 +308,44 @@ def gqa_apply(
         # the scheduler COW-clones a shared page before any chunk can
         # scatter into it, so shared KV is read-only here by construction.
         wp, wo = cache_view["write_page"], cache_view["write_offset"]
+        if "k_scale" in cache:
+            # int8 pages: quantize on scatter (per-token, per-kv-head
+            # symmetric scales — the granularity an incremental write can
+            # commit without retouching the rest of the page) and store the
+            # scale in the sidecar leaf at the same (page, offset). The COW
+            # discipline above covers the sidecar too: it lives in the same
+            # pool subtree, so a shared page's scales are cloned with it.
+            from repro.core.quant import dequantize_kv, quantize_kv
+
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            k_cache = cache["k"].at[wp, wo].set(kq)
+            v_cache = cache["v"].at[wp, wo].set(vq)
+            ks_cache = cache["k_scale"].at[wp, wo].set(ks)
+            vs_cache = cache["v_scale"].at[wp, wo].set(vs)
+            if use_kernel and S == 1:
+                from repro.kernels.ops import paged_attention_q8
+
+                out = paged_attention_q8(
+                    q[:, 0], k_cache, v_cache, ks_cache, vs_cache,
+                    cache_view["page_table"], cache_view["seq_lens"],
+                    window=cfg.sliding_window,
+                )[:, None]
+            else:
+                KVh, hd = k_cache.shape[2], k_cache.shape[3]
+                bt = jnp.maximum(cache_view["page_table"], 0)
+                kg = dequantize_kv(
+                    k_cache[bt], ks_cache[bt], q.dtype
+                ).reshape(B, -1, KVh, hd)
+                vg = dequantize_kv(
+                    v_cache[bt], vs_cache[bt], q.dtype
+                ).reshape(B, -1, KVh, hd)
+                out = attention_core(
+                    q, kg, vg, positions, cache_view["k_pos"], cfg.sliding_window
+                )
+            cache = {"k": k_cache, "v": v_cache,
+                     "k_scale": ks_cache, "v_scale": vs_cache}
+            return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
         k_cache = cache["k"].at[wp, wo].set(k)
         v_cache = cache["v"].at[wp, wo].set(v)
         if use_kernel and S == 1:

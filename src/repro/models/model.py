@@ -52,6 +52,13 @@ def model_decl(cfg: ModelConfig) -> Dict[str, Any]:
         assert cfg.num_encoder_layers > 0
         decls["encoder"] = stack_decl(cfg, enc_slots, cfg.num_encoder_layers)
         decls["encoder_norm"] = norm_decl(cfg.d_model, cfg.norm_type)
+    if cfg.quant_weights == "int8":
+        # serving-side int8 expert weights: expert decls become int8 and
+        # gain bf16 per-output-channel scale decls that keep the leading
+        # ("expert", ...) axis, so EP sharding splits scales with experts
+        from repro.core.quant import quantize_decls
+
+        decls = quantize_decls(decls)
     return decls
 
 
@@ -210,28 +217,38 @@ def paged_stack_decl(cfg: ModelConfig, num_pages: int, page_size: int) -> Dict[s
     their shard's stride).
 
     Paged mode covers GQA attention stacks only (dense / moe / vlm-as-text
-    families); MLA, SSM and cross-attention configs keep the ring cache."""
+    families); MLA, SSM and cross-attention configs keep the ring cache.
+
+    ``cfg.quant_kv == "int8"`` switches the k/v payload to int8 and adds
+    per-token, per-kv-head f32 scale sidecar leaves (``k_scale``/
+    ``v_scale``, head dim collapsed to 1) to the same pool subtree. The
+    sidecars keep the page axis at 1 and the page_size axis at 2, so every
+    pool-tree operation (``copy_pages`` COW, ``permute_pool`` defrag,
+    ``pool_sharding`` DP split, the first-leaf shape introspection below)
+    moves scales with their pages structurally."""
     slots = build_slots(cfg)
     periods = periods_for(cfg, slots)
     assert not cfg.use_mla and all(
         s.mixer == "attn" and not s.cross_attn for s in slots
     ), "paged KV cache supports GQA attention stacks only"
     kv, hd = cfg.num_kv_heads, cfg.head_dim_
-    dt = jnp.dtype(cfg.dtype)
+    quant = getattr(cfg, "quant_kv", "none") == "int8"
+    dt = jnp.dtype(jnp.int8) if quant else jnp.dtype(cfg.dtype)
 
     def pool():
-        return {
-            "attn": {
-                "k": ParamDecl(
-                    (periods, num_pages, page_size, kv, hd),
-                    ("layers", None, None, None, None), "zeros", dt,
-                ),
-                "v": ParamDecl(
-                    (periods, num_pages, page_size, kv, hd),
-                    ("layers", None, None, None, None), "zeros", dt,
-                ),
-            }
-        }
+        kv_decl = lambda: ParamDecl(
+            (periods, num_pages, page_size, kv, hd),
+            ("layers", None, None, None, None), "zeros", dt,
+        )
+        attn = {"k": kv_decl(), "v": kv_decl()}
+        if quant:
+            scale_decl = lambda: ParamDecl(
+                (periods, num_pages, page_size, kv, 1),
+                ("layers", None, None, None, None), "zeros", jnp.float32,
+            )
+            attn["k_scale"] = scale_decl()
+            attn["v_scale"] = scale_decl()
+        return {"attn": attn}
 
     return {"stack": {f"slot{i}": pool() for i in range(len(slots))}}
 

@@ -33,6 +33,39 @@ _DTYPE_BYTES = {
     "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
 }
 
+def dtype_width(name: str) -> int:
+    """Byte width of a config dtype string (``bfloat16`` -> 2, ``int8`` ->
+    1, ...) without hardcoding a bf16 assumption anywhere downstream."""
+    import jax.numpy as jnp
+
+    return jnp.dtype(name).itemsize
+
+
+def kv_entry_bytes(cfg) -> float:
+    """HBM bytes per (token, kv-head) KV-cache entry, from the config.
+
+    ``cfg.quant_kv == "int8"`` pages store an int8 head vector plus one f32
+    per-token scale in the sidecar leaf; otherwise entries are
+    ``cfg.dtype`` wide. Used by ``serving/kv_cache.kv_page_bytes`` and the
+    bench bytes accounting so quantized dry-runs and residency numbers
+    report honest bandwidth terms."""
+    hd = cfg.head_dim_
+    if getattr(cfg, "quant_kv", "none") == "int8":
+        return hd * 1 + 4  # int8 payload + f32 scale sidecar per token-head
+    return hd * dtype_width(cfg.dtype)
+
+
+def weight_elem_bytes(cfg) -> float:
+    """HBM bytes per expert-FFN weight element, from the config: 1 for
+    int8-quantized weights (per-channel bf16 scales are amortized over the
+    contraction dim — callers that know exact shapes add them explicitly,
+    e.g. the kernel bench's bytes_per_row column), else the ``cfg.dtype``
+    width."""
+    if getattr(cfg, "quant_weights", "none") == "int8":
+        return 1
+    return dtype_width(cfg.dtype)
+
+
 # result-shape pattern of an HLO op line: `%name = TYPE[d0,d1]{layout} op-name(`
 _OP_RE = re.compile(
     r"=\s+(?:\()?((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*)?)+)(?:\))?\s+"

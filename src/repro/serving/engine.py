@@ -106,6 +106,8 @@ class ServingEngine:
         shed_watermark: Optional[int] = None,
         step_timeout_s: Optional[float] = None,
         prefix_cache: bool = False,
+        quant_weights: str = "none",
+        quant_kv: str = "none",
     ):
         # MoE decode runs through the same dispatch subsystem as training;
         # `dispatcher` overrides the config's token dispatcher (e.g. "sorted"
@@ -134,6 +136,31 @@ class ServingEngine:
         self.step_timeout_s = step_timeout_s
         self.shed_count = 0  # ring-mode max_queue sheds (paged: scheduler's)
         cfg = with_dispatcher(cfg, dispatcher)
+        # -- low-precision serving (core/quant.py) --------------------------
+        # quant_weights: expert FFN weights become int8 + per-channel scales
+        # (quantized once here; the fused-dequant kernels / XLA dequant
+        # fallback pick them up by key). quant_kv: the page pool stores int8
+        # KV with per-token scale sidecar leaves — paged mode only, the ring
+        # cache has no sidecar. Engine kwargs extend (never clear) any quant
+        # modes already set on the config.
+        for qv in (quant_weights, quant_kv):
+            if qv not in ("none", "int8"):
+                raise ValueError(f"quant mode must be 'none' or 'int8', got {qv!r}")
+        if quant_weights != "none" or quant_kv != "none":
+            cfg = cfg.replace(
+                quant_weights=quant_weights if quant_weights != "none"
+                else cfg.quant_weights,
+                quant_kv=quant_kv if quant_kv != "none" else cfg.quant_kv,
+            )
+        if cfg.quant_kv == "int8" and cache_mode != "paged":
+            raise ValueError(
+                "quant_kv requires cache_mode='paged' (the scale sidecar "
+                "lives in the page pool)"
+            )
+        if cfg.quant_weights == "int8":
+            from repro.core.quant import quantize_params
+
+            params = quantize_params(params)  # idempotent
         self.mesh = mesh
         self.dp_shards, self.ep_size = 1, 1
         if mesh is not None:

@@ -639,13 +639,16 @@ def copy_pages(pool, copies: List[tuple]):
 
 def kv_page_bytes(cfg: ModelConfig, page_size: int) -> int:
     """Bytes one allocated page pins across the whole stack (k + v, every
-    layer)."""
+    layer). Quant-aware: ``cfg.quant_kv == "int8"`` pages are int8 payload
+    plus the per-token f32 scale sidecar (roofline/analysis.py owns the
+    config-driven byte widths)."""
     from repro.models.transformer import build_slots, periods_for
+    from repro.roofline.analysis import kv_entry_bytes
 
     slots = build_slots(cfg)
     periods = periods_for(cfg, slots)
-    per_entry = cfg.num_kv_heads * cfg.head_dim_ * jnp.dtype(cfg.dtype).itemsize
-    return 2 * periods * len(slots) * page_size * per_entry
+    per_entry = cfg.num_kv_heads * kv_entry_bytes(cfg)
+    return int(2 * periods * len(slots) * page_size * per_entry)
 
 
 def kv_bytes_resident(cfg: ModelConfig, pool: PagePool) -> int:
