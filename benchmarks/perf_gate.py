@@ -61,6 +61,7 @@ _INFO_MARKERS = ("anomaly", "shed", "evict", "skipped", "rollback",
 # section must fail here, not ride through as "new keys pass".
 REQUIRED_SECTIONS = {
     "BENCH_serving.json": ("prefix_reuse", "speculation", "quant"),
+    "BENCH_kernels.json": ("fused_dispatch", "autotune"),
 }
 
 

@@ -56,6 +56,10 @@ class MoEConfig:
     z_loss_coef: float = 1e-3  # router z-loss
     dispatcher: str = "allgather"  # allgather | alltoall | a2a_overlap | sorted
     strict_dispatch: bool = False  # error (not fallback) on illegal EP dispatch
+    # dispatch-in-kernel: fold the sorted dispatcher's token gather and
+    # gate-weighted combine into the grouped-GEMM prologue/epilogue (no
+    # (N_pad, D) permuted buffer in HBM). Kernel path only; sorted-only.
+    fused_dispatch: bool = False
     expert_d_ff: int = 0  # per-expert FFN hidden size (0 -> use model d_ff)
     moe_layer_freq: int = 1  # MoE every k-th layer (jamba: 2)
     dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
@@ -65,6 +69,11 @@ class MoEConfig:
 
     def __post_init__(self):
         assert self.dispatcher in self.DISPATCHERS, self.dispatcher
+        assert not (self.fused_dispatch and self.dispatcher != "sorted"), (
+            "fused_dispatch folds the permutation into the grouped GEMM and "
+            "only exists for the sorted dispatcher; got "
+            f"dispatcher={self.dispatcher!r}"
+        )
 
     def experts_ff(self, d_ff: int) -> int:
         return self.expert_d_ff or d_ff

@@ -47,10 +47,11 @@ def aligned_rows(N: int, E: int, row_block: int) -> int:
 class SortedDispatcher(TokenDispatcher):
     name = "sorted"
 
-    def dispatch(
-        self, x: jax.Array, idx: jax.Array, gates: jax.Array, row_block: int = 1
-    ):
-        T, D = x.shape
+    def _indices(self, idx: jax.Array, gates: jax.Array, row_block: int):
+        """Shared routing-index computation: the stable expert-major sort and
+        the (token, slot, dest, gate_sorted, group_sizes) vectors both the
+        materializing and the fused paths consume."""
+        T = idx.shape[0]
         E = self.moe.num_experts
         k = idx.shape[-1]
         N = T * k
@@ -62,6 +63,7 @@ class SortedDispatcher(TokenDispatcher):
         order = jnp.argsort(flat_e)
         sorted_e = flat_e[order]
         token = order // k  # token providing each sorted row
+        slot = (order % k).astype(jnp.int32)  # its top-k slot (unique pair)
         group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
 
         # destination row of each sorted assignment in the (tile-aligned)
@@ -71,15 +73,29 @@ class SortedDispatcher(TokenDispatcher):
         starts = jnp.cumsum(group_sizes) - group_sizes
         pos_in_group = jnp.arange(N, dtype=jnp.int32) - starts[sorted_e]
         dest = (starts_pad[sorted_e] + pos_in_group).astype(jnp.int32)
+        gate_sorted = gates.reshape(N)[order]
+        return token, slot, dest, gate_sorted, group_sizes
 
-        N_pad = aligned_rows(N, E, b)
+    def dispatch(
+        self, x: jax.Array, idx: jax.Array, gates: jax.Array, row_block: int = 1
+    ):
+        T, D = x.shape
+        E = self.moe.num_experts
+        N = T * idx.shape[-1]
+        token, slot, dest, gate_sorted, group_sizes = self._indices(
+            idx, gates, row_block
+        )
+
+        N_pad = aligned_rows(N, E, row_block)
         xs = jnp.zeros((N_pad, D), x.dtype).at[dest].set(x[token])
         state = DispatchState(
-            layout=DispatchLayout("sorted", E, group_sizes=group_sizes, row_block=b),
+            layout=DispatchLayout(
+                "sorted", E, group_sizes=group_sizes, row_block=row_block
+            ),
             residuals={
                 "token": token,
                 "dest": dest,
-                "gate_sorted": gates.reshape(N)[order],
+                "gate_sorted": gate_sorted,
             },
             static={"tokens": T},
         )
@@ -88,10 +104,42 @@ class SortedDispatcher(TokenDispatcher):
     def combine(self, ye: jax.Array, state) -> jax.Array:
         D = ye.shape[-1]
         r = state.residuals
-        yv = ye[r["dest"]]  # (N, D) valid rows back in sorted order
-        yv = yv * r["gate_sorted"][:, None].astype(ye.dtype)
+        # fp32 accumulation for the k-way scatter-add (a bf16 accumulator
+        # loses ~2 bits over k partial sums); cast once at the end
+        yv = ye[r["dest"]].astype(jnp.float32)  # (N, D) valid rows, sorted order
+        yv = yv * r["gate_sorted"][:, None].astype(jnp.float32)
         T = state.static["tokens"]
-        return jnp.zeros((T, D), yv.dtype).at[r["token"]].add(yv)
+        out = jnp.zeros((T, D), jnp.float32).at[r["token"]].add(yv)
+        return out.astype(ye.dtype)
+
+    def _apply_fused(
+        self, experts, x: jax.Array, gates: jax.Array, idx: jax.Array
+    ) -> jax.Array:
+        """Dispatch-in-kernel path: the gather runs in the grouped GEMM's
+        prologue and the gate-weighted combine in its epilogue, so neither
+        the permuted (N_pad, D) buffer nor the (N, D) gathered output is
+        materialized in HBM."""
+        from repro.core.quant import is_quantized
+        from repro.kernels import ops
+
+        token, slot, dest, gate_sorted, group_sizes = self._indices(
+            idx, gates, KERNEL_ROW_BLOCK
+        )
+        if is_quantized(experts):
+            return ops.grouped_gemm_fused_q8(
+                x,
+                experts["w_gate"], experts["w_up"], experts["w_down"],
+                experts["w_gate_scale"], experts["w_up_scale"],
+                experts["w_down_scale"],
+                group_sizes, token, dest, slot, gate_sorted,
+                row_block=KERNEL_ROW_BLOCK,
+            )
+        return ops.grouped_gemm_fused(
+            x,
+            experts["w_gate"], experts["w_up"], experts["w_down"],
+            group_sizes, token, dest, slot, gate_sorted,
+            row_block=KERNEL_ROW_BLOCK,
+        )
 
     def apply(
         self,
@@ -101,6 +149,8 @@ class SortedDispatcher(TokenDispatcher):
         idx: jax.Array,
         use_kernel: bool = False,
     ) -> jax.Array:
+        if use_kernel and getattr(self.moe, "fused_dispatch", False):
+            return self._apply_fused(experts, x, gates, idx)
         # the kernel tiles rows -> tile-aligned regions; XLA ragged_dot
         # consumes the compact buffer
         row_block = KERNEL_ROW_BLOCK if use_kernel else 1

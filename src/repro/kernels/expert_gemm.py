@@ -884,3 +884,448 @@ def grouped_gemm_q8(
         xs, w_gate, w_up, w_down, s_gate, s_up, s_down, group_sizes,
         tuple(blocks), interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused dispatch: gather + combine folded into the grouped-GEMM grid
+#
+# The sorted dispatcher's dispatch -> grouped_gemm -> combine pipeline costs
+# two extra HBM round-trips per MoE layer: the permuted (N_pad, D) scatter
+# buffer before the GEMM and the (N, D) gathered/gate-weighted output after
+# it. The fused kernels absorb both, the same scalar-prefetch block-table
+# trick as paged_attention:
+#
+# * prologue gather: the per-row token ids (``tok``) are scalar-prefetched
+#   and resolved in the x BlockSpec index map — an extra innermost grid dim
+#   ``r`` stages one (1, bd) row of the token-major x per step into a
+#   (bc, bd) VMEM scratch, and the gate/up dot fires once per (t, f, d) at
+#   r == bc-1. HBM read traffic equals the unfused kernel's reads of the
+#   materialized buffer; the buffer's write+read round trip disappears.
+# * epilogue combine: the down kernel writes each row gate-weighted (fp32
+#   multiply) straight to a slot-partials output shaped (k*T + 1, D) at
+#   scalar-prefetched ``row_out`` = slot*T + token. Each (token, slot) pair
+#   is unique in the top-k assignment list, so every partials row is
+#   written exactly once — a race-free scatter with no atomics; padding
+#   rows and non-final-f grid steps land on the trash row k*T. The k slot
+#   planes are summed in fp32 outside the kernel (the per-token k-way
+#   combine), matching the fp32-accum convention.
+#
+# Backward: custom_vjp with inputs-only residuals. The cotangent is pulled
+# through ``jax.vjp`` of the UNFUSED composition (scatter -> grouped_gemm,
+# whose own VJP recomputes SwiGLU -> gather/gate/scatter-add), so fused
+# gradients agree with the unfused sorted dispatcher by construction and
+# nothing O(N*F) — and no (N_pad, D) buffer — is saved across fwd/bwd.
+# ---------------------------------------------------------------------------
+
+_TRASH = -1  # sentinel resolved to the k*T trash row at call sites
+
+
+def _fused_gate_up_kernel(
+    tg_ref, tr_ref, tok_ref, x_ref, wg_ref, wu_ref, h_ref, x_scr, g_acc, u_acc,
+    *, nd: int, bc: int, bf: int,
+):
+    """Gather prologue + gate/up: grid (nt, nf, nd, bc). Each r-step DMAs
+    row tok[t*bc + r] of the token-major x (resolved in the BlockSpec index
+    map) into the staging scratch; the MXU work runs once per (t, f, d)."""
+    t, d, r = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+    x_scr[pl.ds(r, 1), :] = x_ref[0][None]
+    last = r == bc - 1
+
+    @pl.when(jnp.logical_and(last, d == 0))
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        u_acc[...] = jnp.zeros_like(u_acc)
+
+    valid = tr_ref[t]
+
+    @pl.when(jnp.logical_and(last, valid > 0))
+    def _compute():
+        x = x_scr[...]
+        g_acc[...] += jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        u_acc[...] += jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(last, d == nd - 1))
+    def _epilogue():
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bc, bf), 0)
+        h = _silu(g_acc[...]) * u_acc[...]
+        h_ref[...] = jnp.where(rows < valid, h, 0.0).astype(h_ref.dtype)
+
+
+def _fused_down_kernel(
+    tg_ref, tr_ref, row_ref, gate_ref, h_ref, wd_ref, o_ref, acc,
+    *, nf: int, bc: int,
+):
+    """Down GEMM + combine epilogue: grid (nt, nd, nf, bc). The F
+    contraction accumulates once per (t, d, f) at r == 0; at f == nf-1
+    every r-step emits one gate-weighted row to its slot-partials slot
+    (the out BlockSpec routes non-final-f steps and padding rows to the
+    trash row)."""
+    t, f, r = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(jnp.logical_and(r == 0, f == 0))
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    valid = tr_ref[t]
+
+    @pl.when(jnp.logical_and(r == 0, valid > 0))
+    def _compute():
+        acc[...] += jnp.dot(h_ref[...], wd_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(f == nf - 1)
+    def _write():
+        g = gate_ref[t * bc + r]  # f32 scalar from SMEM
+        row = acc[pl.ds(r, 1), :][0] * g
+        o_ref[0] = jnp.where(r < valid, row, 0.0).astype(o_ref.dtype)
+
+
+def _fused_down_kernel_q8(
+    tg_ref, tr_ref, row_ref, gate_ref, h_ref, wd_ref, sd_ref, o_ref, acc,
+    *, nf: int, bc: int,
+):
+    t, f, r = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(jnp.logical_and(r == 0, f == 0))
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    valid = tr_ref[t]
+
+    @pl.when(jnp.logical_and(r == 0, valid > 0))
+    def _compute():
+        acc[...] += jnp.dot(
+            h_ref[...], wd_ref[0].astype(h_ref.dtype),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(f == nf - 1)
+    def _write():
+        g = gate_ref[t * bc + r]
+        row = acc[pl.ds(r, 1), :][0] * sd_ref[0].astype(jnp.float32) * g
+        o_ref[0] = jnp.where(r < valid, row, 0.0).astype(o_ref.dtype)
+
+
+def _fused_gate_up_kernel_q8(
+    tg_ref, tr_ref, tok_ref, x_ref, wg_ref, wu_ref, sg_ref, su_ref, h_ref,
+    x_scr, g_acc, u_acc, *, nd: int, bc: int, bf: int,
+):
+    t, d, r = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+    x_scr[pl.ds(r, 1), :] = x_ref[0][None]
+    last = r == bc - 1
+
+    @pl.when(jnp.logical_and(last, d == 0))
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        u_acc[...] = jnp.zeros_like(u_acc)
+
+    valid = tr_ref[t]
+
+    @pl.when(jnp.logical_and(last, valid > 0))
+    def _compute():
+        x = x_scr[...]
+        g_acc[...] += jnp.dot(x, wg_ref[0].astype(x.dtype), preferred_element_type=jnp.float32)
+        u_acc[...] += jnp.dot(x, wu_ref[0].astype(x.dtype), preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(last, d == nd - 1))
+    def _epilogue():
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bc, bf), 0)
+        g = g_acc[...] * sg_ref[0].astype(jnp.float32)
+        u = u_acc[...] * su_ref[0].astype(jnp.float32)
+        h = _silu(g) * u
+        h_ref[...] = jnp.where(rows < valid, h, 0.0).astype(h_ref.dtype)
+
+
+def _aligned_rows(N: int, E: int, row_block: int) -> int:
+    """Static worst-case rows of the (never materialized) sorted buffer —
+    mirrors core.dispatch.sorted.aligned_rows without importing the
+    dispatch subsystem into the kernel layer."""
+    if row_block <= 1:
+        return N
+    return -(-(N + E * (row_block - 1)) // row_block) * row_block
+
+
+def _fused_prefetch(token, dest, slot, gate_sorted, T, N_pad):
+    """Scalar-prefetch vectors indexed by buffer row: source token id
+    (padding rows -> 0, masked by tr), slot-partials destination row
+    (padding rows -> the k*T trash row), and f32 gate per row."""
+    N = token.shape[0]
+    k = N // T
+    tok_pad = jnp.zeros((N_pad,), jnp.int32).at[dest].set(token.astype(jnp.int32))
+    row_out = jnp.full((N_pad,), k * T, jnp.int32).at[dest].set(
+        slot.astype(jnp.int32) * T + token.astype(jnp.int32)
+    )
+    gate_pad = jnp.zeros((N_pad,), jnp.float32).at[dest].set(
+        gate_sorted.astype(jnp.float32)
+    )
+    return tok_pad, row_out, gate_pad
+
+
+def _fused_fwd_impl(
+    x: jax.Array,  # (T, D) token-major model activations
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+    group_sizes: jax.Array,  # (E,)
+    token: jax.Array,  # (N,) source token per sorted row
+    dest: jax.Array,  # (N,) buffer row per sorted assignment
+    slot: jax.Array,  # (N,) top-k slot per sorted row (order % k)
+    gate_sorted: jax.Array,  # (N,) combine gate per sorted row
+    blocks: Tuple[int, int, int],
+    interpret: bool,
+) -> jax.Array:
+    T, D = x.shape
+    E, _, F = w_gate.shape
+    N = token.shape[0]
+    assert N % T == 0, (N, T)
+    k = N // T
+    bc = blocks[0]
+    N_pad = _aligned_rows(N, E, bc)
+    bf, bd = (_pick(b, d) for b, d in zip(blocks[1:], (F, D)))
+    nt, nf, nd = N_pad // bc, F // bf, D // bd
+    tg, tr = group_tiling(group_sizes, nt, bc)
+    tok_pad, row_out, gate_pad = _fused_prefetch(token, dest, slot, gate_sorted, T, N_pad)
+
+    h = pl.pallas_call(
+        functools.partial(_fused_gate_up_kernel, nd=nd, bc=bc, bf=bf),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(nt, nf, nd, bc),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, bd), lambda t, f, d, r, tg, tr, tok: (tok[t * bc + r], d)
+                ),
+                pl.BlockSpec((1, bd, bf), lambda t, f, d, r, tg, tr, tok: (tg[t], d, f)),
+                pl.BlockSpec((1, bd, bf), lambda t, f, d, r, tg, tr, tok: (tg[t], d, f)),
+            ],
+            out_specs=pl.BlockSpec((bc, bf), lambda t, f, d, r, tg, tr, tok: (t, f)),
+            scratch_shapes=[
+                pltpu.VMEM((bc, bd), x.dtype),
+                pltpu.VMEM((bc, bf), jnp.float32),
+                pltpu.VMEM((bc, bf), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((N_pad, F), x.dtype),
+        interpret=interpret,
+    )(tg, tr, tok_pad, x, w_gate, w_up)
+
+    trash = k * T
+    partials = pl.pallas_call(
+        functools.partial(_fused_down_kernel, nf=nf, bc=bc),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(nt, nd, nf, bc),
+            in_specs=[
+                pl.BlockSpec((bc, bf), lambda t, d, f, r, tg, tr, ro, ga: (t, f)),
+                pl.BlockSpec(
+                    (1, bf, bd), lambda t, d, f, r, tg, tr, ro, ga: (tg[t], f, d)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, bd),
+                lambda t, d, f, r, tg, tr, ro, ga: (
+                    jnp.where(f == nf - 1, ro[t * bc + r], trash), d
+                ),
+            ),
+            scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((k * T + 1, D), x.dtype),
+        interpret=interpret,
+    )(tg, tr, row_out, gate_pad, h, w_down)
+
+    # k-way per-token combine: fp32 sum over the slot planes, cast once
+    y = jnp.sum(partials[: k * T].reshape(k, T, D).astype(jnp.float32), axis=0)
+    return y.astype(x.dtype)
+
+
+def _fused_unfused_ref(
+    x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted,
+    blocks, interpret,
+):
+    """The unfused sorted-dispatcher composition the fused path replaces:
+    scatter into the tile-aligned buffer -> grouped_gemm (Pallas custom_vjp
+    with SwiGLU recompute) -> gather + fp32 gate-weighted scatter-add. Used
+    as the backward graph so fused grads match the unfused path exactly."""
+    T, D = x.shape
+    E = w_gate.shape[0]
+    N = token.shape[0]
+    N_pad = _aligned_rows(N, E, blocks[0])
+    xs = jnp.zeros((N_pad, D), x.dtype).at[dest].set(x[token])
+    ys = _grouped_gemm_p(xs, w_gate, w_up, w_down, group_sizes, blocks, interpret)
+    yv = ys[dest].astype(jnp.float32) * gate_sorted.astype(jnp.float32)[:, None]
+    return jnp.zeros((T, D), jnp.float32).at[token].add(yv).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(9, 10))
+def _fused_moe_p(
+    x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted,
+    blocks, interpret,
+):
+    return _fused_fwd_impl(
+        x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted,
+        blocks, interpret,
+    )
+
+
+def _fused_moe_fwd(
+    x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted,
+    blocks, interpret,
+):
+    y = _fused_fwd_impl(
+        x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted,
+        blocks, interpret,
+    )
+    # inputs-only residuals: no (N_pad, D) buffer, no (N, F) intermediate
+    return y, (x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted)
+
+
+def _fused_moe_bwd(blocks, interpret, res, dy):
+    x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted = res
+    _, vjp = jax.vjp(
+        lambda x, wg, wu, wd, g: _fused_unfused_ref(
+            x, wg, wu, wd, group_sizes, token, dest, slot, g, blocks, interpret
+        ),
+        x, w_gate, w_up, w_down, gate_sorted,
+    )
+    dx, dwg, dwu, dwd, dgate = vjp(dy)
+    return dx, dwg, dwu, dwd, None, None, None, None, dgate
+
+
+_fused_moe_p.defvjp(_fused_moe_fwd, _fused_moe_bwd)
+
+
+def fused_moe_residuals(x, w_gate, w_up, w_down, group_sizes, token, dest,
+                        slot, gate_sorted,
+                        blocks: Tuple[int, int, int] = DEFAULT_BLOCKS):
+    """Shape-only view of the fused VJP residuals (the bench/test contract):
+    token-major inputs and O(N) index vectors only — never the (N_pad, D)
+    dispatch buffer or an (N, F) intermediate."""
+    res = jax.eval_shape(
+        lambda *a: _fused_moe_fwd(*a, tuple(blocks), True)[1],
+        x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted,
+    )
+    return jax.tree.leaves(res)
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def grouped_gemm_fused(
+    x: jax.Array,  # (T, D) token-major activations (pre-dispatch)
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+    group_sizes: jax.Array,  # (E,) valid rows per expert
+    token: jax.Array,  # (N,) source token id per sorted row (order // k)
+    dest: jax.Array,  # (N,) tile-aligned buffer row per sorted row
+    slot: jax.Array,  # (N,) top-k slot per sorted row (order % k)
+    gate_sorted: jax.Array,  # (N,) combine gate per sorted row
+    blocks: Tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Dispatch-in-kernel sorted MoE FFN: (T, D) -> (T, D) with the token
+    gather in the prologue and the gate-weighted combine in the epilogue —
+    the permuted (N_pad, D) buffer and the (N, D) gathered output never
+    exist in HBM. Differentiable (fused fwd, unfused-recompute bwd)."""
+    return _fused_moe_p(
+        x, w_gate, w_up, w_down, group_sizes, token, dest, slot, gate_sorted,
+        tuple(blocks), interpret,
+    )
+
+
+def _fused_fwd_q8_impl(
+    x, w_gate, w_up, w_down, s_gate, s_up, s_down, group_sizes,
+    token, dest, slot, gate_sorted, blocks, interpret,
+):
+    T, D = x.shape
+    E, _, F = w_gate.shape
+    N = token.shape[0]
+    assert N % T == 0, (N, T)
+    k = N // T
+    bc = blocks[0]
+    N_pad = _aligned_rows(N, E, bc)
+    bf_o, bd_o = _pick(blocks[1], F), _pick(blocks[2], D)
+    bd_c = _pick(blocks[2], D, itemsize=1)
+    bf_c = _pick(blocks[1], F, itemsize=1)
+    nt = N_pad // bc
+    tg, tr = group_tiling(group_sizes, nt, bc)
+    tok_pad, row_out, gate_pad = _fused_prefetch(token, dest, slot, gate_sorted, T, N_pad)
+
+    h = pl.pallas_call(
+        functools.partial(
+            _fused_gate_up_kernel_q8, nd=D // bd_c, bc=bc, bf=bf_o
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(nt, F // bf_o, D // bd_c, bc),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, bd_c), lambda t, f, d, r, tg, tr, tok: (tok[t * bc + r], d)
+                ),
+                pl.BlockSpec((1, bd_c, bf_o), lambda t, f, d, r, tg, tr, tok: (tg[t], d, f)),
+                pl.BlockSpec((1, bd_c, bf_o), lambda t, f, d, r, tg, tr, tok: (tg[t], d, f)),
+                pl.BlockSpec((1, bf_o), lambda t, f, d, r, tg, tr, tok: (tg[t], f)),
+                pl.BlockSpec((1, bf_o), lambda t, f, d, r, tg, tr, tok: (tg[t], f)),
+            ],
+            out_specs=pl.BlockSpec((bc, bf_o), lambda t, f, d, r, tg, tr, tok: (t, f)),
+            scratch_shapes=[
+                pltpu.VMEM((bc, bd_c), x.dtype),
+                pltpu.VMEM((bc, bf_o), jnp.float32),
+                pltpu.VMEM((bc, bf_o), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((N_pad, F), x.dtype),
+        interpret=interpret,
+    )(tg, tr, tok_pad, x, w_gate, w_up, s_gate, s_up)
+
+    trash = k * T
+    nf_c = F // bf_c
+    partials = pl.pallas_call(
+        functools.partial(_fused_down_kernel_q8, nf=nf_c, bc=bc),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(nt, D // bd_o, nf_c, bc),
+            in_specs=[
+                pl.BlockSpec((bc, bf_c), lambda t, d, f, r, tg, tr, ro, ga: (t, f)),
+                pl.BlockSpec(
+                    (1, bf_c, bd_o), lambda t, d, f, r, tg, tr, ro, ga: (tg[t], f, d)
+                ),
+                pl.BlockSpec((1, bd_o), lambda t, d, f, r, tg, tr, ro, ga: (tg[t], d)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, bd_o),
+                lambda t, d, f, r, tg, tr, ro, ga: (
+                    jnp.where(f == nf_c - 1, ro[t * bc + r], trash), d
+                ),
+            ),
+            scratch_shapes=[pltpu.VMEM((bc, bd_o), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((k * T + 1, D), x.dtype),
+        interpret=interpret,
+    )(tg, tr, row_out, gate_pad, h, w_down, s_down)
+
+    y = jnp.sum(partials[: k * T].reshape(k, T, D).astype(jnp.float32), axis=0)
+    return y.astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def grouped_gemm_fused_q8(
+    x: jax.Array,  # (T, D) token-major activations (pre-dispatch)
+    w_gate: jax.Array,  # (E, D, F) int8
+    w_up: jax.Array,  # (E, D, F) int8
+    w_down: jax.Array,  # (E, F, D) int8
+    s_gate: jax.Array,  # (E, F)
+    s_up: jax.Array,  # (E, F)
+    s_down: jax.Array,  # (E, D)
+    group_sizes: jax.Array,  # (E,)
+    token: jax.Array,  # (N,)
+    dest: jax.Array,  # (N,)
+    slot: jax.Array,  # (N,)
+    gate_sorted: jax.Array,  # (N,)
+    blocks: Tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jax.Array:
+    """int8-weight fused-dispatch sorted MoE FFN (serving): fused dequant,
+    gather prologue, gate-weighted combine epilogue. Forward-only, like
+    :func:`grouped_gemm_q8`."""
+    return _fused_fwd_q8_impl(
+        x, w_gate, w_up, w_down, s_gate, s_up, s_down, group_sizes,
+        token, dest, slot, gate_sorted, tuple(blocks), interpret,
+    )

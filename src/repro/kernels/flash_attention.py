@@ -196,12 +196,14 @@ def _fa_bwd_dkv_kernel(
 
 
 def _tiling(Sq: int, Sk: int, blocks: Tuple[int, int]):
-    bq = min(blocks[0], Sq)
-    while Sq % bq:
-        bq //= 2
-    bk = min(blocks[1], Sk)
-    while Sk % bk:
-        bk //= 2
+    """Static tile heuristic (the autotuner's cache-miss fallback): largest
+    sublane-aligned divisors <= the requested blocks via the shared
+    ``_pick``, replacing the old power-of-two halving loop that could land
+    on needlessly small tiles for non-power-of-two sequence lengths."""
+    from repro.kernels.expert_gemm import _pick
+
+    bq = _pick(blocks[0], Sq, align=8)
+    bk = _pick(blocks[1], Sk, align=8)
     return bq, bk
 
 

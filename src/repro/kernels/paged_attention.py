@@ -40,9 +40,14 @@ NEG_INF = -1e30
 def _pa_kernel(
     bt_ref, len_ref,  # scalar-prefetched: (B, maxP) page ids, (B,) lengths
     q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-    *, ps: int, maxP: int, window: Optional[int], scale: float,
+    *, ps: int, maxP: int, bps: int, nsub: int,
+    window: Optional[int], scale: float,
 ):
+    # innermost grid axis walks sub-page tiles: step j covers rows
+    # [js*bps, (js+1)*bps) of page jp (bps == ps -> one step per page)
     b, j = pl.program_id(0), pl.program_id(2)
+    jp, js = j // nsub, j % nsub
+    start = jp * ps + js * bps  # logical position of the tile's first row
 
     @pl.when(j == 0)
     def _init():
@@ -50,18 +55,18 @@ def _pa_kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    page = bt_ref[b, j]
+    page = bt_ref[b, jp]
     n = len_ref[b]  # valid tokens incl. the current one; query pos = n - 1
-    live = jnp.logical_and(page >= 0, j * ps < n)
+    live = jnp.logical_and(page >= 0, start < n)
     if window is not None:
-        # whole page below the window start contributes nothing
-        live = jnp.logical_and(live, (j + 1) * ps - 1 > n - 1 - window)
+        # whole tile below the window start contributes nothing
+        live = jnp.logical_and(live, start + bps - 1 > n - 1 - window)
 
     def _compute():
         q = q_ref[0, 0]  # (G, d)
-        k = k_ref[0, :, 0]  # (ps, d)
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, ps)
-        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        k = k_ref[0, :, 0]  # (bps, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bps)
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, (1, bps), 1)
         mask = kpos < n
         if window is not None:
             mask = jnp.logical_and(mask, kpos > n - 1 - window)
@@ -78,7 +83,7 @@ def _pa_kernel(
 
     pl.when(live)(_compute)
 
-    @pl.when(j == maxP - 1)
+    @pl.when(j == maxP * nsub - 1)
     def _write():
         # fully-masked sequences (l == 0) emit zeros, matching the oracle
         l = l_scr[...]
@@ -89,7 +94,7 @@ def _pa_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("window", "scale", "interpret")
+    jax.jit, static_argnames=("window", "scale", "interpret", "page_block")
 )
 def paged_attention(
     q: jax.Array,  # (B, H, d) one query token per sequence
@@ -100,6 +105,7 @@ def paged_attention(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     interpret: bool = False,
+    page_block: Optional[int] = None,
 ) -> jax.Array:
     B, H, d = q.shape
     num_pages, ps, KV, _ = k_pool.shape
@@ -107,6 +113,11 @@ def paged_attention(
     G = H // KV
     assert H % KV == 0, (H, KV)
     scale = float(scale) if scale is not None else d**-0.5
+    # sub-page KV tile (autotunable): bps rows DMA'd per grid step. The
+    # default — one whole page per step — preserves the original schedule.
+    bps = int(page_block) if page_block else ps
+    assert ps % bps == 0, (ps, bps)
+    nsub = ps // bps
 
     qg = q.reshape(B, KV, G, d)
     bt = block_table.astype(jnp.int32)
@@ -114,20 +125,25 @@ def paged_attention(
 
     out = pl.pallas_call(
         functools.partial(
-            _pa_kernel, ps=ps, maxP=maxP, window=window, scale=scale
+            _pa_kernel, ps=ps, maxP=maxP, bps=bps, nsub=nsub,
+            window=window, scale=scale,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=(B, KV, maxP),
+            grid=(B, KV, maxP * nsub),
             in_specs=[
                 pl.BlockSpec((1, 1, G, d), lambda b, kv, j, bt, sl: (b, kv, 0, 0)),
                 pl.BlockSpec(
-                    (1, ps, 1, d),
-                    lambda b, kv, j, bt, sl: (jnp.maximum(bt[b, j], 0), 0, kv, 0),
+                    (1, bps, 1, d),
+                    lambda b, kv, j, bt, sl: (
+                        jnp.maximum(bt[b, j // nsub], 0), j % nsub, kv, 0
+                    ),
                 ),
                 pl.BlockSpec(
-                    (1, ps, 1, d),
-                    lambda b, kv, j, bt, sl: (jnp.maximum(bt[b, j], 0), 0, kv, 0),
+                    (1, bps, 1, d),
+                    lambda b, kv, j, bt, sl: (
+                        jnp.maximum(bt[b, j // nsub], 0), j % nsub, kv, 0
+                    ),
                 ),
             ],
             out_specs=pl.BlockSpec(
@@ -162,9 +178,12 @@ def paged_attention(
 def _pa_kernel_q8(
     bt_ref, len_ref,
     q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr,
-    *, ps: int, maxP: int, window: Optional[int], scale: float,
+    *, ps: int, maxP: int, bps: int, nsub: int,
+    window: Optional[int], scale: float,
 ):
     b, j = pl.program_id(0), pl.program_id(2)
+    jp, js = j // nsub, j % nsub
+    start = jp * ps + js * bps
 
     @pl.when(j == 0)
     def _init():
@@ -172,17 +191,17 @@ def _pa_kernel_q8(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    page = bt_ref[b, j]
+    page = bt_ref[b, jp]
     n = len_ref[b]
-    live = jnp.logical_and(page >= 0, j * ps < n)
+    live = jnp.logical_and(page >= 0, start < n)
     if window is not None:
-        live = jnp.logical_and(live, (j + 1) * ps - 1 > n - 1 - window)
+        live = jnp.logical_and(live, start + bps - 1 > n - 1 - window)
 
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
-        k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0]  # (ps, d)
+        k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0]  # (bps, d)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, (1, bps), 1)
         mask = kpos < n
         if window is not None:
             mask = jnp.logical_and(mask, kpos > n - 1 - window)
@@ -193,14 +212,14 @@ def _pa_kernel_q8(
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
         m_scr[...] = m_new
-        v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0]  # (ps, d)
+        v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0]  # (bps, d)
         acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
             p, v, preferred_element_type=jnp.float32
         )
 
     pl.when(live)(_compute)
 
-    @pl.when(j == maxP - 1)
+    @pl.when(j == maxP * nsub - 1)
     def _write():
         l = l_scr[...]
         safe = jnp.maximum(l, 1e-30)
@@ -209,7 +228,9 @@ def _pa_kernel_q8(
         ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret", "page_block")
+)
 def paged_attention_q8(
     q: jax.Array,  # (B, H, d) one query token per sequence
     k_pool: jax.Array,  # (num_pages, page_size, KV, d) int8
@@ -221,6 +242,7 @@ def paged_attention_q8(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     interpret: bool = False,
+    page_block: Optional[int] = None,
 ) -> jax.Array:
     B, H, d = q.shape
     num_pages, ps, KV, _ = k_pool.shape
@@ -229,25 +251,31 @@ def paged_attention_q8(
     assert H % KV == 0, (H, KV)
     assert k_scale.shape == (num_pages, ps, KV, 1), k_scale.shape
     scale = float(scale) if scale is not None else d**-0.5
+    bps = int(page_block) if page_block else ps
+    assert ps % bps == 0, (ps, bps)
+    nsub = ps // bps
 
     qg = q.reshape(B, KV, G, d)
     bt = block_table.astype(jnp.int32)
     sl = seq_lens.astype(jnp.int32)
-    _page = lambda b, kv, j, bt, sl: (jnp.maximum(bt[b, j], 0), 0, kv, 0)
+    _page = lambda b, kv, j, bt, sl: (
+        jnp.maximum(bt[b, j // nsub], 0), j % nsub, kv, 0
+    )
 
     out = pl.pallas_call(
         functools.partial(
-            _pa_kernel_q8, ps=ps, maxP=maxP, window=window, scale=scale
+            _pa_kernel_q8, ps=ps, maxP=maxP, bps=bps, nsub=nsub,
+            window=window, scale=scale,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=(B, KV, maxP),
+            grid=(B, KV, maxP * nsub),
             in_specs=[
                 pl.BlockSpec((1, 1, G, d), lambda b, kv, j, bt, sl: (b, kv, 0, 0)),
-                pl.BlockSpec((1, ps, 1, d), _page),
-                pl.BlockSpec((1, ps, 1, d), _page),
-                pl.BlockSpec((1, ps, 1, 1), _page),
-                pl.BlockSpec((1, ps, 1, 1), _page),
+                pl.BlockSpec((1, bps, 1, d), _page),
+                pl.BlockSpec((1, bps, 1, d), _page),
+                pl.BlockSpec((1, bps, 1, 1), _page),
+                pl.BlockSpec((1, bps, 1, 1), _page),
             ],
             out_specs=pl.BlockSpec(
                 (1, 1, G, d), lambda b, kv, j, bt, sl: (b, kv, 0, 0)

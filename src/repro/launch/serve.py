@@ -7,6 +7,7 @@
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -81,12 +82,30 @@ def main(argv=None):
     ap.add_argument("--quant-kv", default="none", choices=["none", "int8"],
                     help="int8 KV pages with a per-token scale sidecar "
                          "(requires --cache-mode paged)")
+    ap.add_argument("--fused-dispatch", action="store_true",
+                    help="dispatch-in-kernel MoE decode: the sorted "
+                         "dispatcher's gather/combine run inside the "
+                         "grouped-GEMM kernel (requires --use-kernel; "
+                         "implies --dispatcher sorted)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="enable the roofline-driven Pallas tile autotuner "
+                         "(sets REPRO_AUTOTUNE=1; winners persist in "
+                         "~/.cache/repro_autotune.json)")
     args = ap.parse_args(argv)
+    if args.autotune:
+        os.environ["REPRO_AUTOTUNE"] = "1"  # before any kernel wrapper runs
     if (args.speculate or args.prefix_cache) and args.cache_mode != "paged":
         ap.error("--speculate/--prefix-cache require --cache-mode paged")
     if args.quant_kv != "none" and args.cache_mode != "paged":
         ap.error("--quant-kv requires --cache-mode paged (the scale sidecar "
                  "lives in the page pool)")
+    if args.fused_dispatch:
+        if not args.use_kernel:
+            ap.error("--fused-dispatch requires --use-kernel (the fusion "
+                     "lives in the Pallas grouped GEMM)")
+        if args.dispatcher not in (None, "sorted"):
+            ap.error("--fused-dispatch requires --dispatcher sorted")
+        args.dispatcher = "sorted"
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -110,7 +129,8 @@ def main(argv=None):
                   max_queue=args.max_queue or None,
                   shed_watermark=args.shed_watermark or None,
                   prefix_cache=args.prefix_cache,
-                  quant_weights=args.quant_weights, quant_kv=args.quant_kv)
+                  quant_weights=args.quant_weights, quant_kv=args.quant_kv,
+                  fused_dispatch=args.fused_dispatch)
     if args.speculate:
         from repro.serving.speculative import SpeculativeEngine
 

@@ -25,6 +25,7 @@ provenance block in the manifest records the recipe).
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 
@@ -64,6 +65,15 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="restore the latest full-state checkpoint from the "
                          "checkpoint dir and continue to --steps total")
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--fused-dispatch", action="store_true",
+                    help="fold the sorted dispatcher's token gather and "
+                         "gate-weighted combine into the grouped-GEMM "
+                         "kernel (no (N_pad, D) dispatch buffer in HBM); "
+                         "requires --dispatcher sorted and --use-kernel")
+    ap.add_argument("--autotune", action="store_true",
+                    help="enable the roofline-driven Pallas tile autotuner "
+                         "(sets REPRO_AUTOTUNE=1; winners persist in "
+                         "~/.cache/repro_autotune.json)")
     ap.add_argument("--supervise", action="store_true",
                     help="arm the anomaly supervisor: skip NaN/spike steps, "
                          "roll back to the last good checkpoint after "
@@ -84,6 +94,15 @@ def build_argparser() -> argparse.ArgumentParser:
 
 def main(argv=None):
     args = build_argparser().parse_args(argv)
+    if args.autotune:
+        os.environ["REPRO_AUTOTUNE"] = "1"  # before any kernel wrapper runs
+    if args.fused_dispatch:
+        if not args.use_kernel:
+            raise SystemExit("--fused-dispatch requires --use-kernel "
+                             "(the fusion lives in the Pallas grouped GEMM)")
+        if args.dispatcher not in (None, "sorted"):
+            raise SystemExit("--fused-dispatch requires --dispatcher sorted")
+        args.dispatcher = "sorted"
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
@@ -101,6 +120,7 @@ def main(argv=None):
         moe = MoEConfig(
             num_experts=args.upcycle, top_k=args.top_k, capacity_factor=cf,
             router_type=args.router, dispatcher=dispatcher,
+            fused_dispatch=args.fused_dispatch,
         )
         dense_cfg = cfg
         cfg = upcycle_config(dense_cfg, moe)

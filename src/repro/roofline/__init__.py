@@ -1,5 +1,7 @@
 from repro.roofline.analysis import (  # noqa: F401
     HW,
+    HW_PROFILES,
     collective_bytes,
+    hw_profile,
     roofline_terms,
 )

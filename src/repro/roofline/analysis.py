@@ -12,20 +12,67 @@ the effective wire bytes of every all-gather / all-reduce / reduce-scatter /
 all-to-all / collective-permute, using standard ring-algorithm multipliers
 on the *per-device* shard sizes the SPMD partitioner printed.
 
-Hardware model (TPU v5e-class, per the brief): 197 TFLOP/s bf16 per chip,
-819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware model: selectable per-chip profiles (``HW_PROFILES``). The default
+is TPU v5e-class, per the brief: 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. Set ``REPRO_HW_PROFILE=v5p`` (or ``cpu``) to re-cost
+reports and the kernel autotuner for a different part, or pass ``hw=`` to
+the entry points explicitly.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import re
 from typing import Dict, Optional, Tuple
 
-HW = {
-    "peak_flops": 197e12,  # bf16 / chip
-    "hbm_bw": 819e9,  # bytes/s / chip
-    "ici_bw": 50e9,  # bytes/s / link
+# Per-chip hardware profiles. ``vmem_bytes`` is the on-chip vector-memory
+# budget the kernel autotuner filters tile candidates against (per-core
+# VMEM on TPU; an L2-ish working-set proxy on cpu so interpret-mode runs
+# exercise the same filter).
+HW_PROFILES: Dict[str, Dict[str, float]] = {
+    "v5e": {
+        "peak_flops": 197e12,  # bf16 / chip
+        "hbm_bw": 819e9,  # bytes/s / chip
+        "ici_bw": 50e9,  # bytes/s / link
+        "vmem_bytes": 16e6,
+    },
+    "v5p": {
+        "peak_flops": 459e12,
+        "hbm_bw": 2765e9,
+        "ici_bw": 90e9,
+        "vmem_bytes": 32e6,
+    },
+    "cpu": {
+        "peak_flops": 1e12,
+        "hbm_bw": 50e9,
+        "ici_bw": 10e9,
+        "vmem_bytes": 8e6,
+    },
 }
+
+DEFAULT_HW_PROFILE = "v5e"
+
+
+def hw_profile(name: Optional[str] = None) -> Dict[str, float]:
+    """Resolve a hardware profile by name, falling back to the
+    ``REPRO_HW_PROFILE`` env var and then the v5e default. The env var is
+    read per call, so tests and the autotuner can switch profiles without
+    re-importing."""
+    name = name or os.environ.get("REPRO_HW_PROFILE") or DEFAULT_HW_PROFILE
+    try:
+        return HW_PROFILES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown hardware profile {name!r}; expected one of "
+            f"{sorted(HW_PROFILES)}"
+        ) from None
+
+
+# Import-compat name: consumers that read a static dict (roofline/report.py,
+# benchmarks/table2_parallel.py) keep working; it honors REPRO_HW_PROFILE
+# at import time. Call sites that must track the env per call use
+# hw_profile() instead.
+HW = hw_profile()
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -154,17 +201,19 @@ def roofline_terms(
     hlo_text: str,
     chips: int,
     links_per_chip: float = 4.0,
+    hw: Optional[Dict[str, float]] = None,
 ) -> RooflineTerms:
     """DEPRECATED builtin-cost path: XLA's cost_analysis counts while bodies
     once (wrong by ~num_layers for scan-over-layers models). Kept for
     comparison; use :func:`roofline_from_hlo`."""
+    hw = hw or hw_profile()
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", cost.get("bytes accessed0{}", 0.0)))
     coll = collective_bytes(hlo_text)
     return RooflineTerms(
-        compute_s=flops / HW["peak_flops"],
-        memory_s=byts / HW["hbm_bw"],
-        collective_s=coll["total"] / (HW["ici_bw"] * links_per_chip),
+        compute_s=flops / hw["peak_flops"],
+        memory_s=byts / hw["hbm_bw"],
+        collective_s=coll["total"] / (hw["ici_bw"] * links_per_chip),
         flops=flops,
         bytes_accessed=byts,
         collective_bytes_per_device=coll["total"],
@@ -173,17 +222,19 @@ def roofline_terms(
 
 
 def roofline_from_hlo(
-    hlo_text: str, chips: int, links_per_chip: float = 4.0
+    hlo_text: str, chips: int, links_per_chip: float = 4.0,
+    hw: Optional[Dict[str, float]] = None,
 ) -> Tuple[RooflineTerms, Dict[str, float]]:
     """Trip-count-aware roofline terms (see roofline/hlo_analysis.py).
     Returns (terms, per-kind collective byte dict), all per-device."""
     from repro.roofline.hlo_analysis import analyze
 
+    hw = hw or hw_profile()
     costs = analyze(hlo_text)
     terms = RooflineTerms(
-        compute_s=costs.flops / HW["peak_flops"],
-        memory_s=costs.hbm_bytes / HW["hbm_bw"],
-        collective_s=costs.total_collective / (HW["ici_bw"] * links_per_chip),
+        compute_s=costs.flops / hw["peak_flops"],
+        memory_s=costs.hbm_bytes / hw["hbm_bw"],
+        collective_s=costs.total_collective / (hw["ici_bw"] * links_per_chip),
         flops=costs.flops,
         bytes_accessed=costs.hbm_bytes,
         collective_bytes_per_device=costs.total_collective,

@@ -108,6 +108,7 @@ class ServingEngine:
         prefix_cache: bool = False,
         quant_weights: str = "none",
         quant_kv: str = "none",
+        fused_dispatch: bool = False,
     ):
         # MoE decode runs through the same dispatch subsystem as training;
         # `dispatcher` overrides the config's token dispatcher (e.g. "sorted"
@@ -136,6 +137,14 @@ class ServingEngine:
         self.step_timeout_s = step_timeout_s
         self.shed_count = 0  # ring-mode max_queue sheds (paged: scheduler's)
         cfg = with_dispatcher(cfg, dispatcher)
+        if fused_dispatch and cfg.moe is not None:
+            # dispatch-in-kernel decode: sorted-only (MoEConfig asserts) and
+            # meaningful only with use_kernel (the fusion lives in Pallas)
+            if not use_kernel:
+                raise ValueError("fused_dispatch requires use_kernel=True")
+            cfg = cfg.replace(
+                moe=dataclasses.replace(cfg.moe, fused_dispatch=True)
+            )
         # -- low-precision serving (core/quant.py) --------------------------
         # quant_weights: expert FFN weights become int8 + per-channel scales
         # (quantized once here; the fused-dequant kernels / XLA dequant

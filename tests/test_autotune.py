@@ -1,0 +1,359 @@
+"""Autotuner + fused-dispatch suite.
+
+Covers the PR-10 tentpole from both ends:
+
+* ``kernels/autotune.py``: opt-in gating (default off == static ``_pick``
+  heuristics), cache determinism across processes, cache-version
+  invalidation, lane-misaligned (poisoned) cache-entry rejection, VMEM
+  filtering, and modeled-score sanity.
+* fused dispatch (``grouped_gemm_fused``/``_q8``): token-for-token parity
+  against the unfused scatter -> grouped GEMM -> gather/combine composition
+  swept over E/k/D/F, bf16 and f32, int8 weights, and the custom_vjp
+  backward (gradients for x, all three expert weights, and the gates).
+
+Kernel-level sweeps run at ``row_block=8`` to keep interpret-mode grids
+small; the dispatcher-level test at the production ``KERNEL_ROW_BLOCK=128``
+lives in tests/test_dispatch.py.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels import expert_gemm as eg
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Each test gets a private cache file and a clean memo; autotuning is
+    left OFF unless the test enables it."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "cache.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    monkeypatch.delenv("REPRO_HW_PROFILE", raising=False)
+    autotune.reset()
+    yield
+    autotune.reset()
+
+
+# ---------------------------------------------------------------------------
+# Autotuner unit tests
+# ---------------------------------------------------------------------------
+
+
+def _simple_cost(blocks):
+    bf, bd = blocks
+    # strictly prefers larger tiles (fewer steps), fits any VMEM
+    return {"flops": 1e9, "bytes": 1e6, "steps": (512 // bf) * (512 // bd),
+            "vmem_bytes": bf * bd}
+
+
+def _resolve(key="k1", fallback=(128, 128)):
+    return autotune.get_blocks(
+        "unit", key, fallback, dims=(512, 512), aligns=(128, 128),
+        cost=_simple_cost,
+    )
+
+
+def test_disabled_returns_fallback_untouched():
+    assert not autotune.enabled()
+    assert _resolve(fallback=(128, 256)) == (128, 256)
+    assert autotune.stats() == {"hits": 0, "misses": 0}
+    assert not os.path.exists(autotune.cache_path())
+
+
+def test_enabled_tunes_persists_and_hits(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    win = _resolve()
+    assert win == (512, 512)  # fewest steps wins under _simple_cost
+    assert autotune.stats() == {"hits": 0, "misses": 1}
+    assert _resolve() == win
+    assert autotune.stats() == {"hits": 1, "misses": 1}
+    data = json.load(open(autotune.cache_path()))
+    assert data["version"] == autotune.CACHE_VERSION
+    entry = data["profiles"]["v5e"]["k1"]
+    assert entry["blocks"] == [512, 512]
+    assert entry["source"] == "modeled"
+
+
+def test_cache_determinism_across_processes(tmp_path, monkeypatch):
+    """Same key -> same winner from a cold process reading the same cache
+    file (the cross-process contract the persistent cache exists for)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    win = _resolve()
+    prog = (
+        "import json, os\n"
+        "from repro.kernels import autotune\n"
+        "def cost(blocks):\n"
+        "    bf, bd = blocks\n"
+        "    return {'flops': 1e9, 'bytes': 1e6,"
+        " 'steps': (512 // bf) * (512 // bd), 'vmem_bytes': bf * bd}\n"
+        "w = autotune.get_blocks('unit', 'k1', (128, 128), dims=(512, 512),"
+        " aligns=(128, 128), cost=cost)\n"
+        "print(json.dumps({'win': list(w), 'stats': autotune.stats()}))\n"
+    )
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(sys.path))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, check=True)
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert tuple(got["win"]) == win
+    assert got["stats"] == {"hits": 1, "misses": 0}  # served from disk
+
+
+def test_cache_version_invalidation(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    path = autotune.cache_path()
+    with open(path, "w") as f:
+        json.dump({"version": autotune.CACHE_VERSION - 1,
+                   "profiles": {"v5e": {"k1": {"blocks": [128, 128]}}}}, f)
+    autotune.reset()
+    assert _resolve() == (512, 512)  # stale version ignored, re-tuned
+    assert autotune.stats()["misses"] == 1
+    assert json.load(open(path))["version"] == autotune.CACHE_VERSION
+
+
+def test_poisoned_misaligned_cache_entry_rejected(monkeypatch):
+    """A cached winner that fails the lane-alignment validation (e.g. a
+    hand-edited or corrupted entry) must be dropped and re-tuned, never
+    handed to a kernel."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    path = autotune.cache_path()
+    with open(path, "w") as f:
+        json.dump({"version": autotune.CACHE_VERSION, "profiles": {"v5e": {
+            "k1": {"v": 1, "blocks": [96, 512]},     # 96 is lane-misaligned
+            "k2": {"v": 1, "blocks": [512, 768]},    # 768 doesn't divide 512
+            "k3": {"v": 1, "blocks": [512]},         # wrong arity
+        }}}, f)
+    autotune.reset()
+    for key in ("k1", "k2", "k3"):
+        assert _resolve(key=key) == (512, 512)
+    assert autotune.stats() == {"hits": 0, "misses": 3}
+
+
+def test_vmem_filter_and_whole_dim_fallback(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.setenv("REPRO_HW_PROFILE", "cpu")  # 8 MB budget
+
+    def cost(blocks):
+        (b,) = blocks
+        return {"flops": 1.0, "bytes": 1.0, "steps": 1024 // b,
+                "vmem_bytes": b * 64 * 1024}  # 512-tile = 32 MB: over budget
+
+    win = autotune.get_blocks("unit", "kv", (64,), dims=(1024,), aligns=(8,),
+                              cost=cost)
+    assert win[0] * 64 * 1024 <= 0.7 * 8e6
+    # a dim with no aligned pool divisor still yields the whole-dim tile
+    assert list(autotune.candidates((282,), (8,))) == [(282,)]
+
+
+def test_validate_blocks_contract():
+    ok = autotune.validate_blocks
+    assert ok((512, 256), (512, 512), (128, 128))
+    assert ok((282,), (282,), (8,))          # whole sublane dim, any size
+    assert ok((96,), (96,), (128,))          # whole lane dim: compiler pads
+    assert not ok((96,), (192,), (128,))     # misaligned lane split
+    assert not ok((48,), (96,), (128,))
+    assert ok((3,), (9,), (8,))              # sublane divisor: legal
+    assert not ok((100,), (512,), (128,))    # non-divisor
+    assert not ok((512,), (512, 512), (128, 128))  # arity
+
+
+def test_hw_profile_selection(monkeypatch):
+    from repro.roofline.analysis import HW_PROFILES, hw_profile
+
+    assert hw_profile() == HW_PROFILES["v5e"]
+    monkeypatch.setenv("REPRO_HW_PROFILE", "v5p")
+    assert hw_profile() == HW_PROFILES["v5p"]
+    assert hw_profile("cpu") == HW_PROFILES["cpu"]
+    with pytest.raises(ValueError, match="unknown hardware profile"):
+        hw_profile("v9000")
+    for prof in HW_PROFILES.values():
+        assert {"peak_flops", "hbm_bw", "ici_bw", "vmem_bytes"} <= set(prof)
+
+
+def test_modeled_score_monotone_in_hw(monkeypatch):
+    """The same candidate costs less on the faster chip — the autotuner's
+    cost model actually consumes the selected hardware profile."""
+    from repro.roofline.analysis import hw_profile
+
+    s_v5e = autotune.modeled_seconds(1e12, 1e9, 0, hw_profile("v5e"))
+    s_v5p = autotune.modeled_seconds(1e12, 1e9, 0, hw_profile("v5p"))
+    assert s_v5p < s_v5e
+
+
+# ---------------------------------------------------------------------------
+# Fused dispatch parity
+# ---------------------------------------------------------------------------
+
+
+def _routing(rng, E, k, T, bc):
+    """Sorted-dispatcher index vectors for random top-k routing, mirroring
+    SortedDispatcher._indices at row_block=bc."""
+    N = T * k
+    # distinct experts per token (a (token, slot) pair is unique by
+    # construction; distinct experts also make gates meaningful)
+    idx = np.stack([rng.permutation(E)[:k] for _ in range(T)])
+    flat_e = jnp.asarray(idx.reshape(N).astype(np.int32))
+    gates = jnp.asarray(rng.uniform(0.2, 1.0, size=(N,)).astype(np.float32))
+    order = jnp.argsort(flat_e, stable=True)
+    token = (order // k).astype(jnp.int32)
+    slot = (order % k).astype(jnp.int32)
+    sorted_e = flat_e[order]
+    gs = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    padded = ((gs + bc - 1) // bc) * bc
+    starts_pad = jnp.cumsum(padded) - padded
+    starts = jnp.cumsum(gs) - gs
+    pos = jnp.arange(N, dtype=jnp.int32) - starts[sorted_e]
+    dest = (starts_pad[sorted_e] + pos).astype(jnp.int32)
+    return token, slot, dest, gates[order], gs
+
+
+def _weights(rng, E, D, F, dtype):
+    mk = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32) * 0.1).astype(dtype)
+    return mk(E, D, F), mk(E, D, F), mk(E, F, D)
+
+
+FUSED_CASES = [
+    # (E, k, T, D, F)
+    (2, 1, 16, 128, 128),
+    (4, 2, 16, 128, 256),
+    (4, 2, 24, 256, 128),
+    (8, 2, 16, 256, 256),
+]
+
+
+@pytest.mark.parametrize("E,k,T,D,F", FUSED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_forward_matches_unfused(E, k, T, D, F, dtype):
+    rng = np.random.default_rng(hash((E, k, T, D, F)) % 2**31)
+    bc = 8
+    blocks = (bc, 256, 256)
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32)).astype(dtype)
+    wg, wu, wd = _weights(rng, E, D, F, dtype)
+    token, slot, dest, gate_sorted, gs = _routing(rng, E, k, T, bc)
+
+    y_ref = eg._fused_unfused_ref(
+        x, wg, wu, wd, gs, token, dest, slot, gate_sorted, blocks, True
+    )
+    y = eg.grouped_gemm_fused(
+        x, wg, wu, wd, gs, token, dest, slot, gate_sorted,
+        blocks=blocks, interpret=True,
+    )
+    assert y.dtype == x.dtype and y.shape == (T, D)
+    # bf16: the fused path rounds slot partials to bf16 before the f32
+    # k-way sum while the ref rounds after the gather — accumulation-order
+    # noise of a few ulps, so the bf16 budget needs a relative term
+    atol, rtol = (1e-5, 0.0) if dtype == jnp.float32 else (3e-2, 2e-2)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        atol=atol, rtol=rtol,
+    )
+
+
+@pytest.mark.parametrize("E,k,T,D,F", FUSED_CASES[:2])
+def test_fused_backward_matches_unfused(E, k, T, D, F):
+    """custom_vjp gradients (x, all expert weights, gates) match jax.grad
+    through the unfused composition — the fused path must be a drop-in for
+    training, not just decode."""
+    rng = np.random.default_rng(7)
+    bc = 8
+    blocks = (bc, 256, 256)
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    wg, wu, wd = _weights(rng, E, D, F, jnp.float32)
+    token, slot, dest, gate_sorted, gs = _routing(rng, E, k, T, bc)
+
+    def loss_fused(x, wg, wu, wd, g):
+        y = eg.grouped_gemm_fused(x, wg, wu, wd, gs, token, dest, slot, g,
+                                  blocks=blocks, interpret=True)
+        return jnp.sum(jnp.square(y))
+
+    def loss_ref(x, wg, wu, wd, g):
+        y = eg._fused_unfused_ref(x, wg, wu, wd, gs, token, dest, slot, g,
+                                  blocks, True)
+        return jnp.sum(jnp.square(y))
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2, 3, 4))(x, wg, wu, wd, gate_sorted)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(x, wg, wu, wd, gate_sorted)
+    for name, a, b in zip(("x", "wg", "wu", "wd", "gates"), gf, gr):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=2e-4, err_msg=name
+        )
+        assert float(jnp.sum(jnp.abs(a))) > 0, name
+
+
+def test_fused_q8_matches_unfused_q8():
+    rng = np.random.default_rng(11)
+    E, k, T, D, F = 4, 2, 16, 256, 256
+    bc = 8
+    blocks = (bc, 256, 256)
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    wg, wu, wd = _weights(rng, E, D, F, jnp.float32)
+
+    def q8(w, axis):
+        s = jnp.max(jnp.abs(w), axis=axis, keepdims=True) / 127.0
+        return jnp.round(w / s).astype(jnp.int8), jnp.squeeze(s, axis)
+
+    wg_q, sg = q8(wg, 1)
+    wu_q, su = q8(wu, 1)
+    wd_q, sd = q8(wd, 1)
+    token, slot, dest, gate_sorted, gs = _routing(rng, E, k, T, bc)
+
+    N = T * k
+    N_pad = eg._aligned_rows(N, E, bc)
+    xs = jnp.zeros((N_pad, D), x.dtype).at[dest].set(x[token])
+    ys = eg.grouped_gemm_q8(xs, wg_q, wu_q, wd_q, sg, su, sd, gs,
+                            blocks=blocks, interpret=True)
+    yv = ys[dest].astype(jnp.float32) * gate_sorted[:, None]
+    y_ref = jnp.zeros((T, D), jnp.float32).at[token].add(yv)
+
+    y = eg.grouped_gemm_fused_q8(
+        x, wg_q, wu_q, wd_q, sg, su, sd, gs, token, dest, slot, gate_sorted,
+        blocks=blocks, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+def test_fused_residuals_are_inputs_only():
+    """The fused VJP saves token-major inputs and O(N) index vectors only:
+    no (N_pad, D) dispatch buffer, no (N_pad, F) intermediate."""
+    rng = np.random.default_rng(3)
+    E, k, T, D, F = 4, 2, 16, 128, 256
+    bc = 8
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    wg, wu, wd = _weights(rng, E, D, F, jnp.float32)
+    token, slot, dest, gate_sorted, gs = _routing(rng, E, k, T, bc)
+    leaves = eg.fused_moe_residuals(x, wg, wu, wd, gs, token, dest, slot,
+                                    gate_sorted, blocks=(bc, 256, 256))
+    N_pad = eg._aligned_rows(T * k, E, bc)
+    shapes = {tuple(l.shape) for l in leaves}
+    assert (T, D) in shapes
+    assert (N_pad, D) not in shapes and (N_pad, F) not in shapes
+    big = [s for s in shapes if len(s) == 2 and s[0] > T]
+    assert not big, big
+
+
+def test_fused_ops_wrapper_roundtrip():
+    """The ops-level wrapper (autotune hook + interpret selection) matches
+    the kernel called directly."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(5)
+    E, k, T, D, F = 4, 2, 64, 128, 256
+    bc = 128  # production row block through the public wrapper
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    wg, wu, wd = _weights(rng, E, D, F, jnp.float32)
+    token, slot, dest, gate_sorted, gs = _routing(rng, E, k, T, bc)
+    y_ops = ops.grouped_gemm_fused(x, wg, wu, wd, gs, token, dest, slot,
+                                   gate_sorted, row_block=bc)
+    y_eg = eg.grouped_gemm_fused(x, wg, wu, wd, gs, token, dest, slot,
+                                 gate_sorted, blocks=(bc, 512, 512),
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ops), np.asarray(y_eg), atol=1e-6)

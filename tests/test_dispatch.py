@@ -182,6 +182,79 @@ def test_sorted_dispatcher_reentrant():
     )
 
 
+def test_combine_accumulates_in_fp32():
+    """Regression for the bf16 scatter-add combine: many sorted rows adding
+    into one token must accumulate in fp32 and round once. The old
+    ye.dtype accumulator loses low bits on every += and lands measurably
+    farther from the fp32 oracle than one final rounding."""
+    cfg, moe = _cfg(E=4, k=4)
+    d = SortedDispatcher(cfg, moe, None)
+    rng = np.random.default_rng(0)
+    T, k, D = 64, 4, 32
+    token = jnp.asarray(np.repeat(np.arange(T), k).astype(np.int32))
+    N = T * k
+    dest = jnp.arange(N, dtype=jnp.int32)
+    gate = jnp.asarray(rng.uniform(0.2, 1.0, size=(N,)).astype(np.float32))
+    ye = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+
+    from repro.core.dispatch.base import DispatchLayout, DispatchState
+
+    state = DispatchState(
+        layout=DispatchLayout("sorted", 4, group_sizes=None, row_block=1),
+        residuals={"token": token, "dest": dest, "gate_sorted": gate},
+        static={"tokens": T},
+    )
+    ye_bf = ye.astype(jnp.bfloat16)
+    got = d.combine(ye_bf, state)
+    assert got.dtype == jnp.bfloat16
+
+    # fp32 oracle on the bf16 inputs: only the inputs are rounded
+    oracle = jnp.zeros((T, D), jnp.float32).at[token].add(
+        ye_bf.astype(jnp.float32) * gate[:, None]
+    )
+    # the old behavior: accumulate in bf16
+    naive = jnp.zeros((T, D), jnp.bfloat16).at[token].add(
+        ye_bf * gate[:, None].astype(jnp.bfloat16)
+    )
+    err_new = float(jnp.max(jnp.abs(got.astype(jnp.float32) - oracle)))
+    err_old = float(jnp.max(jnp.abs(naive.astype(jnp.float32) - oracle)))
+    # one final rounding: at most 1/2 ulp of the oracle value
+    ulp = float(jnp.max(jnp.abs(oracle))) * 2.0**-8
+    assert err_new <= ulp, (err_new, ulp)
+    assert err_new < err_old, (err_new, err_old)
+
+
+def test_fused_dispatch_matches_unfused_e2e():
+    """Dispatcher-level fused mode at the production KERNEL_ROW_BLOCK=128:
+    apply() with moe.fused_dispatch routes through the dispatch-in-kernel
+    grouped GEMM and matches the materializing kernel path token for token
+    (kernel-level sweeps over shapes/dtypes live in test_autotune.py)."""
+    cfg, moe = _cfg(dispatcher="sorted")
+    moe_f = dataclasses.replace(moe, fused_dispatch=True)
+    params = _params(cfg, moe)
+    dU = SortedDispatcher(cfg, moe, None)
+    dF = SortedDispatcher(cfg, moe_f, None)
+    rng = np.random.default_rng(9)
+    T, E, k = 48, moe.num_experts, moe.top_k
+    x = jnp.asarray(rng.normal(size=(T, 32)).astype(np.float32) * 0.5)
+    idx = jnp.asarray(
+        np.stack([rng.permutation(E)[:k] for _ in range(T)]).astype(np.int32)
+    )
+    gates = jnp.asarray(rng.uniform(0.1, 1.0, size=(T, k)).astype(np.float32))
+    yU = dU.apply(params["experts"], x, gates, idx, use_kernel=True)
+    yF = dF.apply(params["experts"], x, gates, idx, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(yF), np.asarray(yU), atol=2e-5)
+    # without the kernel the flag is inert: plain XLA unfused path
+    yX = dF.apply(params["experts"], x, gates, idx, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(yF), np.asarray(yX), atol=2e-4)
+
+
+def test_fused_dispatch_requires_sorted():
+    with pytest.raises(AssertionError, match="fused_dispatch"):
+        MoEConfig(dispatcher="allgather", fused_dispatch=True)
+    assert MoEConfig(dispatcher="sorted", fused_dispatch=True).fused_dispatch
+
+
 def test_with_dispatcher_helper():
     cfg, _ = _cfg(dispatcher="allgather")
     assert with_dispatcher(cfg, "sorted").moe.dispatcher == "sorted"
